@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing, CSV emission, result storage."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall-time of fn(*args) in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print name,us_per_call,derived CSV rows + save JSON."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        us = r.get("us_per_call", r.get("t_par", 0.0) * 1e6)
+        derived = {k: v for k, v in r.items()
+                   if k not in ("name", "us_per_call")}
+        print(f"{r.get('name', name)},{us:.2f},{json.dumps(derived)}")

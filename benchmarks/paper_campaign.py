@@ -1,0 +1,174 @@
+"""Paper-figure reproductions (one function per table/figure).
+
+  fig2_fig3  — chunk-size progression, SPHYNX L1, P=20, chunk_param=97
+  fig5       — DIST + application loops campaign: T_par per technique,
+               Best combination, %-degradation vs Best
+  fig6       — c.o.v. / p.i. for the most time-consuming SPHYNX loop
+  fig7       — scheduling overhead on a GROMACS-like fine loop
+  fig8       — STREAM sustained bandwidth per technique
+  fig9_10    — chunk-parameter sweep (default vs best; the U-shape)
+  fig11      — chunk progression under chunk-param thresholds 781/3125
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    NOISY_PROFILE,
+    LoopRecorder,
+    best_combination,
+    dist_loop,
+    gromacs_like,
+    nab_like,
+    simulate,
+    sphynx_like,
+    stream_loop,
+)
+
+P = 20  # miniHPC-Broadwell
+TECHS = ["static", "ss", "gss", "tss", "fsc", "fac", "mfac", "fac2", "wf2",
+         "tap", "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af",
+         "maf"]
+
+
+def fig2_fig3(n: int = 200_000) -> list[dict]:
+    """Chunk-size progressions (Fig. 2 non-adaptive / Fig. 3 adaptive)."""
+    w = sphynx_like(n=n)
+    rows = []
+    for t in TECHS:
+        if t in ("static", "ss"):
+            continue  # constant lines, not plotted in the paper either
+        r = simulate(t, w, p=P, chunk_param=97, record_chunks=True)[0].record
+        sizes = [c.size for c in r.chunks]
+        rows.append(dict(
+            name=f"fig2_3/{t}", us_per_call=r.t_par * 1e6,
+            n_chunks=r.n_chunks, first=sizes[0], last=sizes[-1],
+            max=max(sizes), min=min(sizes),
+            adaptive=t in ("bold", "awf", "awf_b", "awf_c", "awf_d",
+                           "awf_e", "af", "maf"),
+            decreasing=all(a >= b for a, b in zip(sizes, sizes[1:])),
+        ))
+    return rows
+
+
+def fig5(n_dist: int = 1000, seed: int = 0) -> list[dict]:
+    """Average T_par per modified loop x technique + Best combination."""
+    rec = LoopRecorder()
+    loops = {f"dist-{l}": dist_loop(l, n=n_dist, seed=seed)
+             for l in ("L0", "L1", "L2", "L3", "L4")}
+    loops["sphynx-L1"] = sphynx_like(n=100_000, seed=seed)
+    loops["nab-L0"] = nab_like(seed=seed)
+    for w in loops.values():
+        for t in TECHS:
+            for rep in range(3):
+                simulate(t, w, p=P, recorder=rec, profile=NOISY_PROFILE,
+                         chunk_cold_cost=2e-6, seed=rep)
+    summary = rec.summary()
+    best = best_combination(summary)
+    rows = []
+    for row in summary:
+        b = best[row["loop"]]
+        rows.append(dict(
+            name=f"fig5/{row['loop']}/{row['technique']}",
+            us_per_call=row["mean_t_par"] * 1e6,
+            degradation_vs_best_pct=round(
+                100 * (row["mean_t_par"] / b["mean_t_par"] - 1), 2),
+            is_best=row["technique"] == b["technique"],
+            cov=round(row["mean_cov"], 4),
+        ))
+    winners = {k: v["technique"] for k, v in best.items()}
+    rows.append(dict(name="fig5/best_combination", us_per_call=0.0,
+                     winners=winners,
+                     distinct_winners=len(set(winners.values()))))
+    return rows
+
+
+def fig6(n: int = 200_000) -> list[dict]:
+    """Load imbalance metrics for the most time-consuming SPHYNX loop."""
+    w = sphynx_like(n=n)
+    rows = []
+    for t in TECHS:
+        r = simulate(t, w, p=P)[0].record
+        rows.append(dict(name=f"fig6/{t}", us_per_call=r.t_par * 1e6,
+                         cov=round(r.cov, 4),
+                         percent_imbalance=round(r.percent_imbalance, 3)))
+    return rows
+
+
+def fig7(n: int = 200_000) -> list[dict]:
+    """Scheduling-overhead exposure on the fine-granularity loop."""
+    w = gromacs_like(n=n)
+    rows = []
+    base = None
+    for t in TECHS:
+        r = simulate(t, w, p=P, numa_penalty=0.6, chunk_cold_cost=2e-7,
+                     profile=NOISY_PROFILE)[0].record
+        if t == "static":
+            base = r.t_par
+        rows.append(dict(
+            name=f"fig7/{t}", us_per_call=r.t_par * 1e6,
+            overhead_vs_static_pct=round(100 * (r.t_par / base - 1), 1),
+            n_chunks=r.n_chunks,
+            sched_time_us=round(r.sched_time * 1e6, 2)))
+    return rows
+
+
+def fig8(n: int = 200_000) -> list[dict]:
+    """STREAM sustained-bandwidth proxy: bytes moved / T_par."""
+    rows = []
+    for kernel in ("copy", "scale", "add", "triad"):
+        w = stream_loop(kernel, n=n)
+        total_bytes = w.meta["bytes_per_iter"] * n
+        for t in ("static", "ss", "gss", "fac", "mfac", "fac2", "awf_b",
+                  "af", "maf"):
+            r = simulate(t, w, p=P, numa_penalty=0.8, chunk_cold_cost=2e-7,
+                         profile=NOISY_PROFILE)[0].record
+            bw = total_bytes / r.t_par / 1e6  # MB/s
+            rows.append(dict(name=f"fig8/{kernel}/{t}",
+                             us_per_call=r.t_par * 1e6,
+                             bandwidth_mb_s=round(bw, 1)))
+    return rows
+
+
+def fig9_10(n: int = 200_000) -> list[dict]:
+    """Chunk-parameter sweep: N/2P, N/4P, ..., 1 (the Fig. 10 U-shape)."""
+    w = sphynx_like(n=n)
+    rows = []
+    params = [1]
+    cp = n // (2 * P)
+    while cp > 1:
+        params.append(cp)
+        cp //= 2
+    for t in ("ss", "gss", "fac2", "fsc", "awf_b", "af", "maf"):
+        best_cp, best_t = None, np.inf
+        for cpv in params:
+            r = simulate(t, w, p=P, chunk_param=cpv,
+                         chunk_cold_cost=5e-6)[0].record
+            rows.append(dict(name=f"fig9_10/{t}/cp={cpv}",
+                             us_per_call=r.t_par * 1e6,
+                             n_chunks=r.n_chunks,
+                             pi=round(r.percent_imbalance, 2)))
+            if r.t_par < best_t:
+                best_cp, best_t = cpv, r.t_par
+        rows.append(dict(name=f"fig9_10/{t}/BEST", us_per_call=best_t * 1e6,
+                         best_chunk_param=best_cp))
+    return rows
+
+
+def fig11(n: int = 1_000_000) -> list[dict]:
+    """Chunk progression with thresholds N/(64P)=781 and N/(16P)=3125."""
+    w = sphynx_like(n=n)
+    rows = []
+    for cp in (n // (64 * P), n // (16 * P)):
+        for t in ("gss", "fac2", "awf_b", "af", "maf", "tap"):
+            r = simulate(t, w, p=P, chunk_param=cp,
+                         record_chunks=True)[0].record
+            sizes = [c.size for c in r.chunks]
+            at_threshold = sum(1 for s in sizes if s == cp)
+            rows.append(dict(
+                name=f"fig11/{t}/cp={cp}", us_per_call=r.t_par * 1e6,
+                n_chunks=r.n_chunks, pct_at_threshold=round(
+                    100 * at_threshold / len(sizes), 1),
+                warmup_10s=sum(1 for s in sizes[:P] if s == 10)))
+    return rows

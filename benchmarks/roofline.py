@@ -1,0 +1,179 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled dry-run (per-DEVICE quantities — XLA's cost/memory analysis and
+the collective parse all operate on the per-device SPMD module):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / ICI_bw_effective
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s per
+ICI link.  v5e has a 2D torus; with the (data, model) mesh mapped to the
+two torus dimensions, a ring collective on one axis moves data over 2
+links (bidirectional) => ICI_bw_effective = 100 GB/s per chip per axis.
+Wire bytes are summed across axes, so the collective term is a mild
+overestimate when both axes are active concurrently (overlap).
+
+Also reported per cell: dominant term, MODEL_FLOPS = 6*N*D (train; 2*N*D
+forward-only; 2*N_active*B decode), the MODEL/HLO flops ratio (useful-
+compute fraction — catches remat/dispatch waste), and a one-line
+bottleneck note.
+
+Usage:
+    python -m benchmarks.roofline [--mesh pod1] [--variant baseline]
+    python -m benchmarks.roofline --compare baseline ragged --arch qwen3-moe-30b-a3b
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 100e9             # B/s effective per chip (2 x 50 GB/s links)
+
+
+def model_flops(rec: dict) -> float:
+    """6ND convention (paper-facing metric), per DEVICE."""
+    chips = rec.get("chips", 256)
+    n_active = rec["active_params"]
+    d = rec["tokens"]
+    kind = rec["kind"]
+    if kind == "train":
+        total = 6.0 * n_active * d
+    elif kind == "prefill":
+        total = 2.0 * n_active * d
+    else:  # decode: one token per sequence in the batch
+        total = 2.0 * n_active * rec["tokens"] / rec["tokens"] * rec.get(
+            "global_batch", 0)
+        # decode cells: tokens == seq*batch but only `batch` new tokens
+        total = 2.0 * n_active * (rec["tokens"] // max(
+            rec["tokens"] // max(rec.get("batch_tokens", 1), 1), 1))
+    return total / chips
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec.get("chips", 256)
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    wire_dev = rec["collectives"]["total_wire_bytes"]
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    # MODEL_FLOPS per device (6ND / 2ND / decode 2N*batch)
+    n_active = rec["active_params"]
+    if rec["kind"] == "train":
+        mf = 6.0 * n_active * rec["tokens"]
+    elif rec["kind"] == "prefill":
+        mf = 2.0 * n_active * rec["tokens"]
+    else:
+        # decode: 'tokens' counts cache positions; new tokens == batch
+        batch = {"decode_32k": 128, "long_500k": 1}.get(rec["shape"], 1)
+        mf = 2.0 * n_active * batch
+    mf_dev = mf / chips
+    bound = max(terms.values())
+    # achievable step time is bounded below by the max term; the roofline
+    # fraction is useful-compute time over that bound
+    frac = (mf_dev / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        variant=rec.get("variant", "baseline"),
+        t_compute_s=t_comp, t_memory_s=t_mem, t_collective_s=t_coll,
+        dominant=dom,
+        model_flops_dev=mf_dev,
+        hlo_flops_dev=flops_dev,
+        useful_ratio=(mf_dev / flops_dev) if flops_dev else 0.0,
+        roofline_fraction=frac,
+        temp_gib=rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        args_gib=rec["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        fits_hbm=(rec["memory"].get("temp_size_in_bytes", 0)
+                  + rec["memory"].get("argument_size_in_bytes", 0))
+        < 16 * 2**30,
+    )
+
+
+def load_cells(mesh: str = "pod1", variant: str = "baseline") -> list[dict]:
+    out = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):
+        rec = json.loads(f.read_text())
+        out.append(rec)
+    return out
+
+
+def rows(mesh: str = "pod1", variant: str = "baseline") -> list[dict]:
+    table = []
+    for rec in load_cells(mesh, variant):
+        if rec["status"] == "skipped":
+            table.append(dict(name=f"roofline/{rec['arch']}/{rec['shape']}",
+                              us_per_call=0.0, status="skipped",
+                              reason=rec["reason"]))
+            continue
+        if rec["status"] != "ok":
+            table.append(dict(name=f"roofline/{rec['arch']}/{rec['shape']}",
+                              us_per_call=0.0, status="error"))
+            continue
+        a = analyze(rec)
+        table.append(dict(
+            name=f"roofline/{a['arch']}/{a['shape']}",
+            us_per_call=max(a["t_compute_s"], a["t_memory_s"],
+                            a["t_collective_s"]) * 1e6,
+            compute_ms=round(a["t_compute_s"] * 1e3, 3),
+            memory_ms=round(a["t_memory_s"] * 1e3, 3),
+            collective_ms=round(a["t_collective_s"] * 1e3, 3),
+            dominant=a["dominant"],
+            useful_ratio=round(a["useful_ratio"], 4),
+            roofline_fraction=round(a["roofline_fraction"], 4),
+            temp_gib=round(a["temp_gib"], 2),
+            fits_hbm=a["fits_hbm"],
+        ))
+    return table
+
+
+def compare(variants: list[str], arch: str | None, mesh: str = "pod1"):
+    by_key: dict[tuple, dict] = {}
+    for v in variants:
+        for rec in load_cells(mesh, v):
+            if rec["status"] != "ok":
+                continue
+            if arch and rec["arch"] != arch:
+                continue
+            a = analyze(rec)
+            by_key.setdefault((rec["arch"], rec["shape"]), {})[v] = a
+    print(f"{'cell':46s} " + " | ".join(f"{v:>28s}" for v in variants))
+    for key, d in sorted(by_key.items()):
+        cells = []
+        for v in variants:
+            a = d.get(v)
+            if a is None:
+                cells.append(" " * 28)
+                continue
+            dom = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+            cells.append(f"{a['dominant'][:4]} {dom*1e3:8.2f}ms "
+                         f"rf={a['roofline_fraction']:.3f}")
+        print(f"{key[0]+'/'+key[1]:46s} " + " | ".join(cells))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--compare", nargs="*", default=None)
+    args = ap.parse_args()
+    if args.compare:
+        compare(args.compare, args.arch, args.mesh)
+        return
+    from .common import emit
+
+    emit(rows(args.mesh, args.variant), f"roofline_{args.mesh}_{args.variant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+framework benches and the roofline table.  Prints
+``name,us_per_call,derived`` CSV rows (and saves JSON under results/).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,roofline] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import framework_bench, paper_campaign
+from .common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller Ns for quick runs")
+    args = ap.parse_args()
+
+    n_small = 50_000 if args.fast else 200_000
+    benches = {
+        "fig2_3": lambda: paper_campaign.fig2_fig3(n=n_small),
+        "fig5": lambda: paper_campaign.fig5(),
+        "fig6": lambda: paper_campaign.fig6(n=n_small),
+        "fig7": lambda: paper_campaign.fig7(n=n_small),
+        "fig8": lambda: paper_campaign.fig8(n=n_small),
+        "fig9_10": lambda: paper_campaign.fig9_10(n=n_small),
+        "fig11": lambda: paper_campaign.fig11(
+            n=200_000 if args.fast else 1_000_000),
+        "moe_balance": framework_bench.moe_balance,
+        "auto_select": framework_bench.auto_select,
+        "serving": framework_bench.serving,
+        "kernels": framework_bench.kernels,
+        "packing": framework_bench.packing,
+    }
+    # roofline needs dry-run artifacts; include when present
+    try:
+        from . import roofline
+
+        if roofline.RESULTS.exists() and any(roofline.RESULTS.iterdir()):
+            benches["roofline"] = lambda: roofline.rows("pod1", "baseline")
+            benches["roofline_pod2"] = lambda: roofline.rows(
+                "pod2", "baseline")
+    except Exception as e:  # pragma: no cover
+        print(f"# roofline unavailable: {e}", file=sys.stderr)
+
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    for name in selected:
+        if name not in benches:
+            print(f"# unknown bench {name}", file=sys.stderr)
+            continue
+        t0 = time.time()
+        rows = benches[name]()
+        emit(rows, name)
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving demo: batched greedy decoding with a KV cache + the DLS
+continuous-batching scheduler routing a ragged request queue.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import init_decode_state, init_decoder
+from repro.serve.scheduler import Request, simulate_serving
+from repro.train.steps import make_serve_step
+
+
+def main():
+    # --- 1. real batched decode on the smoke model ------------------------
+    cfg = smoke_config(ARCHS["qwen3-4b"])
+    params, _ = init_decoder(jax.random.key(0), cfg)
+    b, steps = 4, 32
+    state = init_decode_state(cfg, b, max_len=64)
+    serve = jax.jit(make_serve_step(cfg, sample=True, temperature=1.0))
+    toks = jax.random.randint(jax.random.key(1), (b, 1), 0, cfg.vocab_size)
+    rng = jax.random.key(2)
+    out = [toks]
+    t0 = time.time()
+    for i in range(steps):
+        rng, sub = jax.random.split(rng)
+        toks, state = serve(params, state, toks, sub)
+        out.append(toks)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"decoded {b}x{steps} tokens in {dt:.2f}s "
+          f"({b*steps/dt:.0f} tok/s on CPU)")
+    print("sample token ids:", np.asarray(seqs[0, :16]))
+
+    # --- 2. DLS continuous batching over a ragged queue -------------------
+    rng_np = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=0.0,
+                    prompt_len=int(rng_np.lognormal(6, 1)),
+                    max_new_tokens=int(rng_np.lognormal(4.5, 0.8)))
+            for i in range(300)]
+    print("\nscheduler comparison (8 replicas, one 3x slower):")
+    speed = np.ones(8)
+    speed[0] = 3.0
+    for t in ("static", "ss", "fac2", "af"):
+        r = simulate_serving(reqs, num_workers=8, technique=t,
+                             worker_speed=speed)
+        print(f"  {t:7s} makespan={r['makespan']:7.3f}s "
+              f"p99={r['p99']:6.3f}s imbalance={r['imbalance']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — LB4OMP-style dynamic load balancing as a first-class feature of
+a multi-pod JAX training/inference framework.
+
+Layers:
+  repro.core      the paper's DLS techniques, simulator, metrics, planners
+  repro.balance   DLS applied to framework decisions (MoE, accum, serving)
+  repro.models    model zoo for the 10 assigned architectures
+  repro.kernels   Pallas TPU kernels (flash attention, grouped matmul)
+  repro.data      synthetic corpus + DLS-packed batching
+  repro.optim     sharded AdamW + gradient compression
+  repro.checkpoint  mesh-agnostic sharded checkpointing
+  repro.train / repro.serve  end-to-end drivers
+  repro.launch    production mesh + multi-pod dry-run
+"""
+
+__version__ = "1.0.0"

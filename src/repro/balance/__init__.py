@@ -1,0 +1,4 @@
+"""DLS applied to framework decisions."""
+
+from .accum import AccumPlanner  # noqa: F401
+from .moe import MoEBalancer, plan_tiles  # noqa: F401

@@ -1,0 +1,110 @@
+"""MoE expert load balancing via the paper's adaptive techniques.
+
+Two host-side mechanisms, both driven by `repro.core` chunk calculus:
+
+1. `MoEBalancer` — AWF reformulated for experts.  Experts are workers,
+   tokens are loop iterations; the measured per-expert load (router
+   telemetry) plays the role of AWF's measured chunk times.  The balancer
+   maintains AWF weights and converts them into a *router bias* adjusting
+   expert selection between steps (auxiliary-loss-free balancing; cadence
+   equals AWF-B's batch boundary == training step).
+
+2. `plan_tiles` — DLS-planned tile order for the grouped-matmul kernel:
+   expert row-tiles are interleaved by FAC2 chunking over the per-expert
+   backlog so that a sequential split of the tile list across cores gives
+   near-equal work (the paper's chunk calculus applied to MXU tiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.techniques import make_technique
+
+__all__ = ["MoEBalancer", "plan_tiles"]
+
+
+@dataclasses.dataclass
+class MoEBalancer:
+    """AWF-style adaptive expert weighting -> router bias.
+
+    call `update(load)` after each step with measured tokens-per-expert;
+    read `bias` (numpy, (E,)) to feed params['router_bias'].
+    """
+
+    num_experts: int
+    bias_strength: float = 1e-2
+    recency: bool = True
+
+    def __post_init__(self):
+        self._wap_num = np.zeros(self.num_experts)
+        self._wap_den = np.zeros(self.num_experts)
+        self._k = 0
+        self.weights = np.ones(self.num_experts)
+        self.bias = np.zeros(self.num_experts)
+
+    def update(self, load: np.ndarray) -> np.ndarray:
+        """load: measured tokens routed to each expert this step."""
+        load = np.asarray(load, dtype=np.float64)
+        total = load.sum()
+        if total <= 0:
+            return self.bias
+        # AWF pi: 'time per unit of work'; an overloaded expert has high
+        # effective time-per-token (it is the straggler of the step)
+        pi = load / (total / self.num_experts)  # relative load, mean 1
+        self._k += 1
+        kw = float(self._k) if self.recency else 1.0
+        self._wap_num += kw * pi
+        self._wap_den += kw
+        wap = np.maximum(self._wap_num / self._wap_den, 1e-9)
+        inv = 1.0 / wap
+        self.weights = self.num_experts * inv / inv.sum()
+        # cumulative (integral) bias: keep shifting selection toward
+        # underloaded experts (weights > 1) until loads equalize — the
+        # aux-loss-free balancing rule expressed through AWF weights
+        self.bias = self.bias + self.bias_strength * (self.weights - 1.0)
+        return self.bias
+
+
+def plan_tiles(expert_rows: np.ndarray, block_rows: int, p: int = 8,
+               technique: str = "fac2") -> np.ndarray:
+    """Order expert row-tiles so a P-way sequential split balances work.
+
+    expert_rows: (E,) number of *live* rows per expert (ragged loads).
+    Returns a permutation of tile ids for the capacity layout
+    (tile id = e * tiles_per_expert + j), live tiles first, ordered by DLS
+    chunking of the ragged backlog, dead (all-padding) tiles last.
+    """
+    expert_rows = np.asarray(expert_rows)
+    e = expert_rows.shape[0]
+    tiles_per_e = None
+    # tiles per expert in the capacity layout must be uniform; caller
+    # passes rows <= capacity. We infer capacity tiles from max.
+    cap_tiles = int(np.ceil(expert_rows.max() / block_rows)) if expert_rows.size else 0
+
+    def live_tiles(rows):
+        return int(np.ceil(rows / block_rows))
+
+    live = [(ei, j) for ei in range(e) for j in range(live_tiles(expert_rows[ei]))]
+    # DLS ordering: schedule the live tiles as 'iterations' with FAC2 so
+    # consecutive chunks mix experts with long backlogs first (LPT-flavor)
+    order = sorted(range(len(live)),
+                   key=lambda t: (-expert_rows[live[t][0]], live[t][1]))
+    n = len(order)
+    if n > 1:
+        tech = make_technique(technique, n=n, p=p)
+        sched: list[int] = []
+        pos = 0
+        while True:
+            grant = tech.next_chunk(pos % p)
+            if grant is None:
+                break
+            sched.extend(order[grant.start:grant.start + grant.size])
+            pos += 1
+        order = sched
+    live_ids = [live[t][0] * cap_tiles + live[t][1] for t in order]
+    all_ids = set(range(e * cap_tiles))
+    dead = sorted(all_ids - set(live_ids))
+    return np.asarray(live_ids + dead, dtype=np.int32)

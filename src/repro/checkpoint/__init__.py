@@ -1,0 +1,3 @@
+"""Mesh-agnostic sharded checkpointing."""
+
+from .store import CheckpointStore  # noqa: F401

@@ -1,0 +1,46 @@
+"""repro.core — the paper's contribution: LB4OMP's dynamic loop
+self-scheduling portfolio, measurement features, shared-queue simulator,
+and the SPMD/TPU-native planners built on the same chunk calculus.
+"""
+
+from .techniques import (  # noqa: F401
+    TECHNIQUES,
+    ADAPTIVE_TECHNIQUES,
+    NONADAPTIVE_TECHNIQUES,
+    PROFILING_TECHNIQUES,
+    PAPER_LB4OMP_SET,
+    ChunkGrant,
+    Technique,
+    make_technique,
+)
+from .metrics import (  # noqa: F401
+    LoopInstanceRecord,
+    LoopRecorder,
+    cov,
+    percent_imbalance,
+)
+from .workloads import (  # noqa: F401
+    frontloaded_like,
+    DIST_LOOPS,
+    STREAM_LOOPS,
+    Workload,
+    dist_loop,
+    gromacs_like,
+    make_workload,
+    nab_like,
+    sphynx_like,
+    stream_loop,
+)
+from .simulator import (  # noqa: F401
+    EXACT_PROFILE,
+    NOISY_PROFILE,
+    OverheadModel,
+    ProfileModel,
+    SimResult,
+    best_combination,
+    profile_workload,
+    simulate,
+)
+from .planner import Plan, PlannedChunk, plan_schedule, replan  # noqa: F401
+from . import jax_sched  # noqa: F401
+from .auto import AutoSelector, auto_simulate  # noqa: F401

@@ -1,0 +1,124 @@
+"""Automatic DLS technique selection — the paper's stated future work.
+
+LB4OMP §5: "LB4OMP represents the first and necessary step for devising
+automated methods to dynamically select the highest performing loop
+scheduling techniques during applications execution."  This module is
+that step, built on the unified portfolio:
+
+`AutoSelector` treats technique choice per (loop, time-step) as a bandit:
+each candidate technique is an arm, the reward is negative parallel loop
+time.  Two policies:
+
+  * 'explore_commit' — try each candidate for `explore_steps` time-steps,
+    then commit to the best (the paper's experimental campaign, automated
+    and amortized over the run);
+  * 'ucb' — UCB1 over mean T_par; keeps adapting if the system drifts
+    (re-explores when confidence intervals overlap).
+
+`auto_simulate` drives the discrete-event simulator with the selector —
+used by benchmarks/auto_select.py and tests/test_auto.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .simulator import OverheadModel, ProfileModel, EXACT_PROFILE, simulate
+from .workloads import Workload
+
+__all__ = ["AutoSelector", "auto_simulate"]
+
+DEFAULT_CANDIDATES = ("static", "gss", "fac2", "awf_b", "af", "maf", "ss")
+
+
+@dataclasses.dataclass
+class AutoSelector:
+    """Bandit over the technique portfolio (one loop's selector)."""
+
+    candidates: Sequence[str] = DEFAULT_CANDIDATES
+    policy: str = "ucb"          # 'ucb' | 'explore_commit'
+    explore_steps: int = 1       # per-candidate exploration budget
+    ucb_c: float = 0.5           # exploration strength (relative times)
+
+    def __post_init__(self):
+        k = len(self.candidates)
+        self._n = np.zeros(k, dtype=np.int64)
+        self._mean = np.zeros(k)
+        self._t = 0
+        self._committed: Optional[int] = None
+
+    # -- bandit api -----------------------------------------------------------
+    def choose(self) -> str:
+        if self.policy == "explore_commit":
+            for i in range(len(self.candidates)):
+                if self._n[i] < self.explore_steps:
+                    return self.candidates[i]
+            if self._committed is None:
+                self._committed = int(np.argmin(self._mean))
+            return self.candidates[self._committed]
+        # UCB1 on negative normalized time
+        for i in range(len(self.candidates)):
+            if self._n[i] == 0:
+                return self.candidates[i]
+        scale = max(self._mean.max(), 1e-30)
+        reward = 1.0 - self._mean / scale          # higher = better
+        bonus = self.ucb_c * np.sqrt(
+            np.log(max(self._t, 2)) / np.maximum(self._n, 1))
+        return self.candidates[int(np.argmax(reward + bonus))]
+
+    def record(self, technique: str, t_par: float) -> None:
+        i = self.candidates.index(technique)
+        self._n[i] += 1
+        self._t += 1
+        self._mean[i] += (t_par - self._mean[i]) / self._n[i]
+        if self.policy == "explore_commit":
+            self._committed = None if (self._n < self.explore_steps).any() \
+                else self._committed
+
+    @property
+    def best(self) -> str:
+        seen = self._n > 0
+        if not seen.any():
+            return self.candidates[0]
+        means = np.where(seen, self._mean, np.inf)
+        return self.candidates[int(np.argmin(means))]
+
+    def summary(self) -> dict:
+        return {c: dict(steps=int(n), mean_t_par=float(m))
+                for c, n, m in zip(self.candidates, self._n, self._mean)}
+
+
+def auto_simulate(
+    workload: Workload,
+    p: int,
+    timesteps: int,
+    *,
+    selector: Optional[AutoSelector] = None,
+    chunk_param: int = 1,
+    speeds=None,
+    perturb=None,
+    profile: ProfileModel = EXACT_PROFILE,
+    overhead: OverheadModel = OverheadModel(),
+    seed: int = 0,
+) -> tuple[AutoSelector, list[dict]]:
+    """Run `timesteps` loop instances, selecting the technique per step.
+
+    NOTE: adaptive techniques restart their state on re-selection (a
+    selector switch is a new execution context) — matching how a runtime
+    would swap OMP_SCHEDULE between time-steps.
+    """
+    sel = selector or AutoSelector()
+    history: list[dict] = []
+    for ts in range(timesteps):
+        tech = sel.choose()
+        rec = simulate(tech, workload, p=p, chunk_param=chunk_param,
+                       speeds=speeds, perturb=perturb, profile=profile,
+                       overhead=overhead, seed=seed + ts)[0].record
+        sel.record(tech, rec.t_par)
+        history.append(dict(step=ts, technique=tech, t_par=rec.t_par,
+                            pi=rec.percent_imbalance))
+    return sel, history

@@ -1,0 +1,341 @@
+"""In-graph (jit-compatible) DLS chunk calculus — the TPU-native form.
+
+On SPMD hardware there is no shared queue to poll; instead every worker can
+derive its chunk from a monotone request counter — exactly the paper's mFAC
+argument ("more computation, cheaper synchronization") taken to its limit:
+the *whole schedule* is a pure function of (technique, N, P, params), so it
+can be computed inside a jitted program with `jax.lax.while_loop`, sharded,
+or planned on host and fed in as data.
+
+Provided here:
+
+  * plan_chunks(...)        -> padded (sizes, starts, count) schedule arrays
+    for the deterministic techniques (static/ss/gss/tss/fac2/fac/mfac/
+    wf2/tap/fsc/bold-static estimates).
+  * awf_update(...)         -> AWF weight update from measured per-worker
+    times (the adaptive family's between-step path; cadence = the caller's).
+  * af_update(...) / af_chunk(...) -> AF/mAF online mu/sigma estimator and
+    chunk rule as jnp functions.
+  * balanced_assignment(...) -> DLS-planned partition of ragged work among
+    workers (used by the MoE balancer and the grouped-matmul work lists).
+
+Agreement with the reference implementations in `core/techniques.py` is
+property-tested in tests/test_jax_sched.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "plan_chunks",
+    "max_chunks_bound",
+    "awf_update",
+    "AFState",
+    "af_init",
+    "af_update",
+    "af_chunk",
+    "balanced_assignment",
+]
+
+
+def max_chunks_bound(technique: str, n: int, p: int, chunk_param: int = 1) -> int:
+    """Static upper bound on the number of chunks (for padding)."""
+    cp = max(1, chunk_param)
+    t = technique.lower()
+    if t == "static":
+        return p if cp <= 1 else math.ceil(n / cp)
+    if t in ("ss", "fsc"):
+        # fsc degenerates to fixed chunks >= cp; worst case cp itself
+        return math.ceil(n / cp)
+    # decreasing-chunk techniques: chunk >= max(cp, 1) each round; the
+    # geometric families need ~P*log2(N/(P*cp)) + P rounds; be generous.
+    geo = (p + 1) * (int(math.log2(max(n, 2))) + 2)
+    return int(min(math.ceil(n / cp), max(geo, 4 * p)))
+
+
+def _ceil_div(a: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Exact integer ceil-division — XLA lowers float division by a
+    constant to multiply-by-reciprocal, which is off by 1 ULP around exact
+    multiples and breaks agreement with the float64 reference."""
+    a = a.astype(jnp.int32)
+    return (a + (b - 1)) // b
+
+
+def _gss_next(remaining: jnp.ndarray, p: int, cp: int) -> jnp.ndarray:
+    return jnp.maximum(_ceil_div(remaining, p), cp)
+
+
+def _fac2_next(remaining, p, cp, k):
+    # batch chunk recomputed every P requests; within batch it is frozen.
+    # Closed form: batch j chunk = ceil(R_j / 2P), R_{j+1} = R_j - P*c_j.
+    del k
+    return jnp.maximum(_ceil_div(remaining, 2 * p), cp)
+
+
+def _tap_next(remaining, p, cp, v):
+    t = remaining / p
+    c = t + v * v / 2.0 - v * jnp.sqrt(2.0 * t + v * v / 4.0)
+    return jnp.maximum(jnp.ceil(c).astype(jnp.int32), cp)
+
+
+def _fac_batch_chunk(remaining, p, cp, cov):
+    b = (p / (2.0 * jnp.sqrt(remaining))) * cov
+    x = 1.0 + b * b + b * jnp.sqrt(b * b + 2.0)
+    c = jnp.ceil(remaining / (x * p)).astype(jnp.int32)
+    return jnp.maximum(c, cp)
+
+
+class _PlanCarry(NamedTuple):
+    i: jnp.ndarray          # chunk index
+    scheduled: jnp.ndarray  # iterations handed out
+    batch_rem: jnp.ndarray  # remaining at current batch head
+    in_batch: jnp.ndarray   # requests inside current batch
+    sizes: jnp.ndarray
+    starts: jnp.ndarray
+
+
+def plan_chunks(
+    technique: str,
+    n: int,
+    p: int,
+    chunk_param: int = 1,
+    *,
+    mu: float = 1.0,
+    sigma: float = 0.0,
+    h: float = 1e-6,
+    alpha: float = 1.3,
+    weights: Optional[jnp.ndarray] = None,
+    max_chunks: Optional[int] = None,
+):
+    """Compute the full chunk schedule inside jit.
+
+    Returns (sizes[int32, max_chunks], starts[int32, max_chunks],
+    count[int32]).  Entries past ``count`` are zero.  For weighted
+    techniques (wf2) the i-th chunk belongs to worker i % p.
+    """
+    t = technique.lower().replace("-", "_")
+    cp = max(1, int(chunk_param))
+    mc = int(max_chunks or max_chunks_bound(t, n, p, cp))
+    cov = 0.0 if mu <= 0 else sigma / mu
+    v = alpha * cov
+
+    if t == "static":
+        if cp > 1:
+            sizes_np = np.full(mc, cp, np.int32)
+        else:
+            base, rem = divmod(n, p)
+            sizes_np = np.array([base + (1 if i < rem else 0) for i in range(p)]
+                                + [0] * (mc - p), np.int32)
+        sizes = jnp.asarray(sizes_np)
+        sizes = _clip_to_n(sizes, n)
+        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+        count = jnp.sum((sizes > 0).astype(jnp.int32))
+        return sizes, starts, count
+
+    if t == "ss":
+        full, tail = divmod(n, cp)
+        sizes_np = np.zeros(mc, np.int32)
+        sizes_np[:full] = cp
+        if tail:
+            sizes_np[full] = tail
+        sizes = jnp.asarray(sizes_np)
+        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+        return sizes, starts, jnp.asarray(full + (1 if tail else 0), jnp.int32)
+
+    if t == "fsc":
+        logp = math.log(max(p, 2))
+        if sigma <= 0:
+            c = max(1, math.ceil(n / p))
+        else:
+            c = max(1, math.ceil(((math.sqrt(2.0) * n * h)
+                                  / (sigma * p * math.sqrt(logp))) ** (2.0 / 3.0)))
+        c = max(c, cp)
+        return plan_chunks("ss", n, p, chunk_param=c,
+                           max_chunks=max_chunks or math.ceil(n / c))
+
+    if t == "tss":
+        first = max(1, math.ceil(n / (2 * p)))
+        last = min(max(1, cp), first)
+        steps = max(1, math.ceil(2 * n / (first + last)))
+        delta = (first - last) / (steps - 1) if steps > 1 else 0.0
+        idx = jnp.arange(mc, dtype=jnp.float32)
+        raw = jnp.maximum(jnp.ceil(first - idx * delta).astype(jnp.int32), last)
+        sizes = _clip_to_n(raw, n)
+        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+        count = jnp.sum((sizes > 0).astype(jnp.int32))
+        return sizes, starts, count
+
+    if weights is None:
+        w = jnp.ones((p,), jnp.float32)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        w = w * (p / jnp.sum(w))
+
+    batched = t in ("fac", "mfac", "fac2", "wf2")
+
+    def next_size(carry: _PlanCarry) -> jnp.ndarray:
+        rem_total = jnp.maximum(n - carry.scheduled, 0).astype(jnp.float32)
+        rem_batch = carry.batch_rem.astype(jnp.float32)
+        if t in ("fac", "mfac"):
+            c = _fac_batch_chunk(jnp.maximum(rem_batch, 1.0), p, cp, cov)
+        elif t == "fac2":
+            c = _fac2_next(jnp.maximum(rem_batch, 1.0), p, cp, None)
+        elif t == "wf2":
+            base = _fac2_next(jnp.maximum(rem_batch, 1.0), p, cp, None)
+            wkr = carry.i % p
+            c = jnp.maximum(jnp.ceil(w[wkr] * base).astype(jnp.int32), cp)
+        elif t == "gss":
+            c = _gss_next(jnp.maximum(rem_total, 1.0), p, cp)
+        elif t == "tap":
+            c = _tap_next(jnp.maximum(rem_total, 1.0), p, cp, v)
+        else:
+            raise KeyError(f"plan_chunks: unsupported technique {technique!r}")
+        return jnp.minimum(jnp.maximum(c, 1), jnp.maximum(n - carry.scheduled, 0))
+
+    def cond(carry: _PlanCarry):
+        return jnp.logical_and(carry.scheduled < n, carry.i < mc)
+
+    def body(carry: _PlanCarry):
+        c = next_size(carry)
+        sizes = carry.sizes.at[carry.i].set(c)
+        starts = carry.starts.at[carry.i].set(carry.scheduled)
+        scheduled = carry.scheduled + c
+        in_batch = carry.in_batch + 1
+        new_batch = in_batch >= p
+        batch_rem = jnp.where(
+            new_batch if batched else False,
+            jnp.maximum(n - scheduled, 0),
+            carry.batch_rem,
+        )
+        in_batch = jnp.where(new_batch, 0, in_batch)
+        return _PlanCarry(carry.i + 1, scheduled, batch_rem, in_batch, sizes, starts)
+
+    init = _PlanCarry(
+        i=jnp.asarray(0, jnp.int32),
+        scheduled=jnp.asarray(0, jnp.int32),
+        batch_rem=jnp.asarray(n, jnp.int32),
+        in_batch=jnp.asarray(0, jnp.int32),
+        sizes=jnp.zeros((mc,), jnp.int32),
+        starts=jnp.zeros((mc,), jnp.int32),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.sizes, out.starts, out.i
+
+
+def _clip_to_n(sizes: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Clip a tentative size sequence so cumulative sum == n."""
+    cum = jnp.cumsum(sizes)
+    prev = jnp.concatenate([jnp.zeros(1, sizes.dtype), cum[:-1]])
+    avail = jnp.maximum(n - prev, 0)
+    return jnp.minimum(sizes, avail).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive family — between-step updates (jnp, differentiable-free)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("recency",))
+def awf_update(wap_num: jnp.ndarray, wap_den: jnp.ndarray, k: jnp.ndarray,
+               times: jnp.ndarray, sizes: jnp.ndarray, recency: bool = True):
+    """One AWF adaptation point: fold measured (time, size) per worker.
+
+    Returns (weights, wap_num, wap_den, k+1).  weights sum to P.
+    Matches techniques._AWFBase._adapt (recency-weighted pi averaging).
+    """
+    p = times.shape[0]
+    k1 = k + 1
+    pi = times / jnp.maximum(sizes, 1e-30)
+    mask = sizes > 0
+    kw = jnp.where(recency, k1.astype(jnp.float32), 1.0)
+    wap_num = wap_num + jnp.where(mask, kw * pi, 0.0)
+    wap_den = wap_den + jnp.where(mask, kw, 0.0)
+    wap = wap_num / jnp.maximum(wap_den, 1e-30)
+    inv = jnp.where(wap_den > 0, 1.0 / jnp.maximum(wap, 1e-30), 1.0)
+    weights = p * inv / jnp.sum(inv)
+    return weights, wap_num, wap_den, k1
+
+
+class AFState(NamedTuple):
+    cnt: jnp.ndarray   # (P,)
+    mean: jnp.ndarray  # (P,) per-iteration mean time
+    m2: jnp.ndarray    # (P,) Welford M2
+
+
+def af_init(p: int) -> AFState:
+    z = jnp.zeros((p,), jnp.float32)
+    return AFState(cnt=z, mean=z, m2=z)
+
+
+@jax.jit
+def af_update(s: AFState, worker_times: jnp.ndarray,
+              worker_sizes: jnp.ndarray) -> AFState:
+    """Size-weighted Welford update of per-worker per-iteration time stats
+    (vectorized over workers; a chunk of k iterations contributes k
+    observations of its mean — matches techniques.AF.complete_chunk;
+    size==0 -> no-op)."""
+    valid = worker_sizes > 0
+    k = worker_sizes.astype(jnp.float32)
+    per_iter = worker_times / jnp.maximum(worker_sizes, 1e-30)
+    cnt = s.cnt + jnp.where(valid, k, 0.0)
+    d = per_iter - s.mean
+    mean = jnp.where(valid, s.mean + d * k / jnp.maximum(cnt, 1.0), s.mean)
+    m2 = jnp.where(valid, s.m2 + k * d * (per_iter - mean), s.m2)
+    return AFState(cnt=cnt, mean=mean, m2=m2)
+
+
+@jax.jit
+def af_chunk(s: AFState, remaining: jnp.ndarray) -> jnp.ndarray:
+    """AF chunk size per worker given current stats: the Banicescu-Liu rule
+    c_p = (D + 2TR - sqrt(D^2 + 4DTR)) / (2 mu_p)."""
+    mu = jnp.maximum(s.mean, 1e-30)
+    var = jnp.where(s.cnt > 1, s.m2 / jnp.maximum(s.cnt - 1.0, 1.0), 0.0)
+    d = jnp.sum(var / mu)
+    t = 1.0 / jnp.sum(1.0 / mu)
+    r = remaining.astype(jnp.float32)
+    c = (d + 2.0 * t * r - jnp.sqrt(d * d + 4.0 * d * t * r)) / (2.0 * mu)
+    # GSS envelope guard, matching techniques.AF._chunk_size
+    c = jnp.minimum(c, jnp.ceil(r / mu.shape[0]))
+    return jnp.maximum(jnp.ceil(c).astype(jnp.int32), 1)
+
+
+# ---------------------------------------------------------------------------
+# DLS-planned balanced assignment of ragged work (framework entry point)
+# ---------------------------------------------------------------------------
+
+
+def balanced_assignment(costs: jnp.ndarray, p: int,
+                        weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Assign N ragged work items to P workers, greedy-LPT weighted by DLS
+    (AWF/WF) worker weights.  Returns int32 worker id per item.
+
+    jit-compatible; O(N * P).  Items should be pre-sorted by decreasing
+    cost for the classic LPT bound; we sort internally.
+    """
+    n = costs.shape[0]
+    w = jnp.ones((p,), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
+    w = w * (p / jnp.sum(w))
+    order = jnp.argsort(-costs)
+
+    def body(carry, idx):
+        loads = carry
+        item = costs[idx]
+        # effective finishing time if assigned: (load + cost) / weight
+        eff = (loads + item) / jnp.maximum(w, 1e-6)
+        tgt = jnp.argmin(eff)
+        loads = loads.at[tgt].add(item)
+        return loads, tgt
+
+    _, assign_sorted = jax.lax.scan(body, jnp.zeros((p,), costs.dtype), order)
+    out = jnp.zeros((n,), jnp.int32)
+    return out.at[order].set(assign_sorted.astype(jnp.int32))

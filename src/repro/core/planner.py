@@ -1,0 +1,123 @@
+"""Host-side schedule planner — the bridge from the paper's chunk calculus
+to SPMD execution.
+
+Where the simulator models a live shared queue, the planner *materializes*
+a schedule: a list of (worker, start, size) assignments produced by driving
+the reference techniques in deterministic round-robin request order.  This
+is the form consumed by the framework layers (grad-accum planning, serving
+admission, MoE tile lists) and what elastic re-planning regenerates when
+the worker count changes (node failure / scale-out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .techniques import Technique, make_technique
+
+__all__ = ["PlannedChunk", "Plan", "plan_schedule", "replan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedChunk:
+    worker: int
+    start: int
+    size: int
+    batch: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    technique: str
+    n: int
+    p: int
+    chunk_param: int
+    chunks: tuple[PlannedChunk, ...]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def per_worker(self) -> list[list[PlannedChunk]]:
+        out: list[list[PlannedChunk]] = [[] for _ in range(self.p)]
+        for c in self.chunks:
+            out[c.worker].append(c)
+        return out
+
+    def worker_loads(self, costs: Optional[np.ndarray] = None) -> np.ndarray:
+        """Iterations (or summed costs) per worker."""
+        loads = np.zeros(self.p)
+        if costs is not None:
+            csum = np.concatenate([[0.0], np.cumsum(costs)])
+        for c in self.chunks:
+            loads[c.worker] += (
+                c.size if costs is None else csum[c.start + c.size] - csum[c.start]
+            )
+        return loads
+
+    def validate(self) -> None:
+        """Every iteration scheduled exactly once, in order, no overlap."""
+        pos = 0
+        for c in self.chunks:
+            assert c.start == pos, f"gap/overlap at {c}"
+            assert c.size >= 1
+            pos += c.size
+        assert pos == self.n, f"scheduled {pos} != n {self.n}"
+
+
+def plan_schedule(
+    technique: str | Technique,
+    n: int,
+    p: int,
+    chunk_param: int = 1,
+    *,
+    round_robin: bool = True,
+    **tech_kw,
+) -> Plan:
+    """Materialize a full schedule under deterministic request order.
+
+    Round-robin order is the canonical SPMD plan (worker i takes request
+    i, p+i, 2p+i, ...).  Adaptive techniques planned this way use only
+    their current weights/stats — callers feed telemetry between plans.
+    """
+    if isinstance(technique, Technique):
+        tech = technique
+        name = tech.spec.name
+        assert tech.n == n and tech.p == p
+    else:
+        name = technique
+        tech = make_technique(technique, n=n, p=p, chunk_param=chunk_param, **tech_kw)
+    chunks: list[PlannedChunk] = []
+    wkr = 0
+    while True:
+        g = tech.next_chunk(wkr if round_robin else 0)
+        if g is None:
+            break
+        chunks.append(PlannedChunk(worker=g.worker, start=g.start,
+                                   size=g.size, batch=g.batch))
+        wkr = (wkr + 1) % p
+    plan = Plan(technique=name, n=n, p=p,
+                chunk_param=max(1, int(chunk_param)), chunks=tuple(chunks))
+    plan.validate()
+    return plan
+
+
+def replan(old: Plan, new_p: int, done_iterations: int = 0, **tech_kw) -> Plan:
+    """Elastic re-planning: reschedule the un-executed tail of a plan onto a
+    different worker count (node failure => new_p < old.p; scale-out =>
+    new_p > old.p).  The DLS techniques are self-scheduling, so this is just
+    a fresh plan over the remaining iterations — the paper's adaptivity
+    argument applied at pod scale."""
+    rem = old.n - done_iterations
+    if rem <= 0:
+        return Plan(old.technique, 0, new_p, old.chunk_param, ())
+    sub = plan_schedule(old.technique, rem, new_p,
+                        chunk_param=old.chunk_param, **tech_kw)
+    shifted = tuple(
+        PlannedChunk(c.worker, c.start + done_iterations, c.size, c.batch)
+        for c in sub.chunks
+    )
+    return Plan(old.technique, rem, new_p, old.chunk_param, shifted)

@@ -1,0 +1,810 @@
+"""Dynamic loop self-scheduling (DLS) chunk calculators — the heart of LB4OMP.
+
+Implements every technique shipped by the paper (Sec. 3.1) behind one
+interface, with the exact chunk calculus from the cited literature:
+
+  non-adaptive:  STATIC, SS, GSS, TSS, FSC, FAC, mFAC, FAC2, WF2, TAP
+  adaptive:      BOLD, AWF, AWF-B, AWF-C, AWF-D, AWF-E, AF, mAF
+  extras (beyond paper, same selection criteria): TFSS, RAND
+
+Semantics mirrored from the paper:
+  * the ``chunk_param`` is the *fixed* chunk size for STATIC/SS and a
+    *lower-bound threshold* for every other technique (Sec. 3, "Significance
+    of chunk parameter");
+  * AF/mAF execute a warm-up round with chunks hard-coded to 10 iterations
+    (Sec. 4.4);
+  * FAC synchronizes via a mutex (batch leader computes, followers reuse);
+    mFAC replaces this with an atomic batch counter and per-thread
+    recomputation (Sec. 3.1) — both share the same chunk *values*;
+  * AWF adapts at time-step boundaries, AWF-B/E at batch boundaries,
+    AWF-C/D at chunk boundaries; D and E additionally fold the scheduling
+    overhead into the measured chunk time (Sec. 3.1);
+  * mAF folds the scheduling overhead into AF's per-chunk timings (Sec. 3.1).
+
+Each technique is a small state machine:
+
+    t = make_technique("fac2", n=..., p=..., chunk_param=...)
+    t.begin_instance(instance=0)
+    c = t.next_chunk(worker)            # -> ChunkGrant(start, size, batch)
+    t.complete_chunk(worker, c, exec_time, sched_time)
+
+The same objects drive (a) the discrete-event shared-queue simulator
+(`core/simulator.py`) that reproduces the paper's campaign, and (b) the host
+planner (`core/planner.py`) used by the framework's balancers.  The in-graph
+closed forms live in `core/jax_sched.py` and are tested for agreement with
+these reference implementations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ChunkGrant",
+    "Technique",
+    "make_technique",
+    "TECHNIQUES",
+    "ADAPTIVE_TECHNIQUES",
+    "NONADAPTIVE_TECHNIQUES",
+    "PROFILING_TECHNIQUES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared structures
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkGrant:
+    """One scheduling-round result: ``size`` iterations starting at ``start``."""
+
+    start: int
+    size: int
+    batch: int  # batch index (factoring-family); == request index otherwise
+    worker: int
+
+
+@dataclasses.dataclass
+class TechniqueSpec:
+    """Static description used by the simulator's overhead model (Sec. 4.2).
+
+    ``o_cs`` is the *relative* cost of one chunk-size calculation and
+    ``sync`` the synchronization primitive the technique needs on a shared
+    queue.  These mirror the paper's three-factor overhead decomposition
+    (o_sr, o_cs, o_sync) and are calibrated in `core/simulator.py`.
+    """
+
+    name: str
+    adaptive: bool
+    requires_profiling: bool
+    sync: str  # "none" | "atomic" | "mutex"
+    o_cs: float  # relative chunk-calculation cost (1.0 == one FLOP-ish op)
+
+
+class Technique:
+    """Base class: shared queue bookkeeping + chunk_param threshold logic."""
+
+    spec: TechniqueSpec
+
+    def __init__(self, n: int, p: int, chunk_param: int = 1, **kw):
+        if n <= 0 or p <= 0:
+            raise ValueError(f"need n>0, p>0, got n={n} p={p}")
+        self.n = int(n)
+        self.p = int(p)
+        self.chunk_param = max(1, int(chunk_param))
+        self.scheduled = 0  # iterations handed out so far
+        self.request_idx = 0  # atomic request counter
+        self.instance = 0  # loop instance (time-step) index
+        self._init(**kw)
+
+    # -- subclass hooks ------------------------------------------------------
+    def _init(self, **kw) -> None:  # pragma: no cover - trivial
+        del kw
+
+    def _chunk_size(self, worker: int) -> int:
+        raise NotImplementedError
+
+    # -- public API ----------------------------------------------------------
+    @property
+    def remaining(self) -> int:
+        return self.n - self.scheduled
+
+    def begin_instance(self, instance: int) -> None:
+        """Start a new execution instance of the loop (time-step)."""
+        self.instance = instance
+        self.scheduled = 0
+        self.request_idx = 0
+        self._on_begin_instance()
+
+    def _on_begin_instance(self) -> None:
+        pass
+
+    def _threshold(self, size: int) -> int:
+        # chunk_param is a lower bound for every technique except
+        # STATIC/SS where it *is* the chunk size (handled in subclasses).
+        return max(size, self.chunk_param)
+
+    def next_chunk(self, worker: int) -> Optional[ChunkGrant]:
+        if self.remaining <= 0:
+            return None
+        size = self._chunk_size(worker)
+        size = self._threshold(int(size))
+        size = max(1, min(size, self.remaining))
+        grant = ChunkGrant(
+            start=self.scheduled,
+            size=size,
+            batch=self._batch_of(self.request_idx),
+            worker=worker,
+        )
+        self.scheduled += size
+        self.request_idx += 1
+        self._after_grant(grant)
+        return grant
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx
+
+    def _after_grant(self, grant: ChunkGrant) -> None:
+        pass
+
+    def complete_chunk(
+        self,
+        worker: int,
+        grant: ChunkGrant,
+        exec_time: float,
+        sched_time: float = 0.0,
+    ) -> None:
+        """Telemetry callback — adaptive techniques learn from it."""
+        del worker, grant, exec_time, sched_time
+
+    def end_instance(self) -> None:
+        """Called at the end of a loop instance (time-step boundary)."""
+        pass
+
+
+# ---------------------------------------------------------------------------
+# OpenMP-standard baselines
+# ---------------------------------------------------------------------------
+
+
+class Static(Technique):
+    """schedule(static[,c]) — one pre-planned round, zero synchronization."""
+
+    spec = TechniqueSpec("static", False, False, "none", 1.0)
+
+    def _init(self, **kw):
+        del kw
+
+    def _threshold(self, size: int) -> int:
+        return size  # chunk_param is the exact size, not a threshold
+
+    def _chunk_size(self, worker: int) -> int:
+        if self.chunk_param > 1:
+            return self.chunk_param
+        # default: N/P split, remainder spread over the first N%P workers
+        base, rem = divmod(self.n, self.p)
+        return base + (1 if self._batch_of(self.request_idx) < rem else 0)
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx
+
+
+class SelfScheduling(Technique):
+    """SS == schedule(dynamic,c): fixed chunk c (default 1) per request."""
+
+    spec = TechniqueSpec("ss", False, False, "atomic", 1.0)
+
+    def _threshold(self, size: int) -> int:
+        return size  # chunk_param is the exact size
+
+    def _chunk_size(self, worker: int) -> int:
+        return self.chunk_param
+
+
+class GSS(Technique):
+    """Guided self-scheduling (Polychronopoulos & Kuck 1987): R/P."""
+
+    spec = TechniqueSpec("gss", False, False, "atomic", 2.0)
+
+    def _chunk_size(self, worker: int) -> int:
+        return math.ceil(self.remaining / self.p)
+
+
+class TSS(Technique):
+    """Trapezoid self-scheduling (Tzen & Ni 1993): linear decrement.
+
+    first = ceil(N/2P), last = chunk_param (>=1),
+    C = ceil(2N/(first+last)), delta = (first-last)/(C-1).
+    """
+
+    spec = TechniqueSpec("tss", False, False, "atomic", 2.0)
+
+    def _on_begin_instance(self):
+        self._first = max(1, math.ceil(self.n / (2 * self.p)))
+        self._last = max(1, self.chunk_param)
+        if self._last > self._first:
+            self._last = self._first
+        self._steps = max(1, math.ceil(2 * self.n / (self._first + self._last)))
+        self._delta = (
+            (self._first - self._last) / (self._steps - 1) if self._steps > 1 else 0.0
+        )
+
+    def _init(self, **kw):
+        del kw
+        self._on_begin_instance()
+
+    def _chunk_size(self, worker: int) -> int:
+        i = self.request_idx
+        return max(self._last, int(math.ceil(self._first - i * self._delta)))
+
+
+# ---------------------------------------------------------------------------
+# Dynamic, non-adaptive (LB4OMP additions)
+# ---------------------------------------------------------------------------
+
+
+class FSC(Technique):
+    """Fixed-size chunking (Kruskal & Weiss 1985).
+
+    Optimal *constant* chunk given profiled iteration-time stats and the
+    scheduling overhead h:
+
+        c = ( (sqrt(2) * N * h) / (sigma * P * sqrt(log P)) ) ** (2/3)
+
+    Requires mu/sigma profiling collected before execution (Sec. 3.2).
+    """
+
+    spec = TechniqueSpec("fsc", False, True, "atomic", 2.0)
+
+    def _init(self, mu: float = 1.0, sigma: float = 0.0, h: float = 1e-6, **kw):
+        del kw
+        self.mu = float(mu)
+        self.sigma = float(sigma)
+        self.h = float(h)
+        logp = math.log(max(self.p, 2))
+        if self.sigma <= 0.0:
+            # perfectly regular loop: overhead argues for the static split
+            self._chunk = max(1, math.ceil(self.n / self.p))
+        else:
+            num = math.sqrt(2.0) * self.n * self.h
+            den = self.sigma * self.p * math.sqrt(logp)
+            self._chunk = max(1, math.ceil((num / den) ** (2.0 / 3.0)))
+
+    def _chunk_size(self, worker: int) -> int:
+        return self._chunk
+
+
+class _FactoringBase(Technique):
+    """Shared batch accounting for the factoring family.
+
+    A batch = P consecutive requests sharing one chunk size computed from
+    the iterations remaining at the *start* of the batch.
+    """
+
+    def _init(self, **kw):
+        del kw
+        self._batch = 0
+        self._in_batch = 0
+        self._batch_remaining = self.n
+        self._batch_chunk = self._compute_batch_chunk(self.n, 0)
+
+    def _on_begin_instance(self):
+        self._batch = 0
+        self._in_batch = 0
+        self._batch_remaining = self.n
+        self._batch_chunk = self._compute_batch_chunk(self.n, 0)
+
+    def _compute_batch_chunk(self, remaining: int, batch: int) -> int:
+        raise NotImplementedError
+
+    def _batch_of(self, request_idx: int) -> int:
+        return self._batch
+
+    def _chunk_size(self, worker: int) -> int:
+        return self._batch_chunk
+
+    def _after_grant(self, grant: ChunkGrant) -> None:
+        self._in_batch += 1
+        if self._in_batch >= self.p:
+            self._batch += 1
+            self._in_batch = 0
+            self._batch_remaining = self.remaining
+            if self._batch_remaining > 0:
+                self._batch_chunk = self._compute_batch_chunk(
+                    self._batch_remaining, self._batch
+                )
+
+
+class FAC(_FactoringBase):
+    """Factoring (Flynn Hummel, Schonberg & Flynn 1992).
+
+    Probabilistically-optimal batch factor:
+        b_j = (P / (2 sqrt(R_j))) * (sigma / mu)
+        x_j = 1 + b_j^2 + b_j * sqrt(b_j^2 + 2)
+        c_j = ceil(R_j / (x_j * P))
+
+    The original implementation guards the batch state with a *mutex*: the
+    first thread of a batch computes c_j, followers reuse it.  That cost is
+    modelled by the simulator via spec.sync == "mutex".
+    """
+
+    spec = TechniqueSpec("fac", False, True, "mutex", 8.0)
+
+    def _init(self, mu: float = 1.0, sigma: float = 0.0, **kw):
+        self.mu = max(float(mu), 1e-30)
+        self.sigma = max(float(sigma), 0.0)
+        super()._init(**kw)
+
+    def _compute_batch_chunk(self, remaining: int, batch: int) -> int:
+        b = (self.p / (2.0 * math.sqrt(remaining))) * (self.sigma / self.mu)
+        x = 1.0 + b * b + b * math.sqrt(b * b + 2.0)
+        return max(1, math.ceil(remaining / (x * self.p)))
+
+
+class MFAC(FAC):
+    """mFAC — LB4OMP's improvement of FAC (Sec. 3.1).
+
+    Chunk *values* identical to FAC; the mutex is replaced by an atomic
+    batch counter and each thread recomputes the chunk from the counter.
+    More compute (higher o_cs would be wrong — same formula, computed by
+    everyone) but far cheaper synchronization.
+    """
+
+    spec = TechniqueSpec("mfac", False, True, "atomic", 8.0)
+
+
+class FAC2(_FactoringBase):
+    """Practical factoring: every batch hands out half the remainder."""
+
+    spec = TechniqueSpec("fac2", False, False, "atomic", 2.0)
+
+    def _compute_batch_chunk(self, remaining: int, batch: int) -> int:
+        return max(1, math.ceil(remaining / (2.0 * self.p)))
+
+
+class WF2(_FactoringBase):
+    """Weighted factoring (Flynn Hummel et al. 1996), FAC2-based practical
+    variant: worker p receives w_p * (batch chunk).  Weights are fixed for
+    the whole execution and normalized to sum to P.
+    """
+
+    spec = TechniqueSpec("wf2", False, False, "atomic", 3.0)
+
+    def _init(self, weights: Optional[Sequence[float]] = None, **kw):
+        if weights is None:
+            w = np.ones(self.p, dtype=np.float64)
+        else:
+            w = np.asarray(list(weights), dtype=np.float64)
+            if w.shape != (self.p,):
+                raise ValueError(f"weights must have shape ({self.p},)")
+            if np.any(w <= 0):
+                raise ValueError("weights must be positive")
+        self.weights = w * (self.p / w.sum())
+        super()._init(**kw)
+
+    def _compute_batch_chunk(self, remaining: int, batch: int) -> int:
+        # base (unweighted) FAC2 chunk; per-worker weighting in _chunk_size
+        return max(1, math.ceil(remaining / (2.0 * self.p)))
+
+    def _chunk_size(self, worker: int) -> int:
+        return max(1, int(math.ceil(self.weights[worker] * self._batch_chunk)))
+
+
+class TAP(Technique):
+    """Tapering (Lucco 1992) — probabilistic generalization of GSS.
+
+    With v = alpha * sigma/mu and T = R/P:
+        c = T + v^2/2 - v * sqrt(2T + v^2/4)
+    alpha defaults to 1.3 (~90% confidence), per the DLS literature.
+    """
+
+    spec = TechniqueSpec("tap", False, True, "atomic", 4.0)
+
+    def _init(self, mu: float = 1.0, sigma: float = 0.0, alpha: float = 1.3, **kw):
+        del kw
+        self.mu = max(float(mu), 1e-30)
+        self.sigma = max(float(sigma), 0.0)
+        self.v = float(alpha) * self.sigma / self.mu
+
+    def _chunk_size(self, worker: int) -> int:
+        t = self.remaining / self.p
+        v = self.v
+        c = t + v * v / 2.0 - v * math.sqrt(2.0 * t + v * v / 4.0)
+        return max(1, int(math.ceil(c)))
+
+
+class TFSS(Technique):
+    """Trapezoid factoring self-scheduling — beyond-paper extra that meets
+    the paper's selection criteria (simple chunk calculation).  Batches of P
+    requests share the mean of the TSS bounds for that batch."""
+
+    spec = TechniqueSpec("tfss", False, False, "atomic", 2.0)
+
+    def _init(self, **kw):
+        del kw
+        self._first = max(1, math.ceil(self.n / (2 * self.p)))
+        self._last = 1.0
+        self._steps = max(1, math.ceil(2 * self.n / (self._first + self._last)))
+        self._delta = (
+            (self._first - self._last) / (self._steps - 1) if self._steps > 1 else 0.0
+        )
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx // self.p
+
+    def _chunk_size(self, worker: int) -> int:
+        j = self.request_idx // self.p
+        lo = self._first - j * self.p * self._delta
+        hi = lo - (self.p - 1) * self._delta
+        return max(1, int(math.ceil((lo + hi) / 2.0)))
+
+
+class Rand(Technique):
+    """RAND — uniformly random chunk in [N/(100P), N/(2P)] (related-work
+    baseline from Ciorba et al. 2018; beyond-paper extra)."""
+
+    spec = TechniqueSpec("rand", False, False, "atomic", 2.0)
+
+    def _init(self, seed: int = 0, **kw):
+        del kw
+        self._rng = np.random.default_rng(seed)
+        self._lo = max(1, self.n // (100 * self.p))
+        self._hi = max(self._lo + 1, self.n // (2 * self.p))
+
+    def _chunk_size(self, worker: int) -> int:
+        return int(self._rng.integers(self._lo, self._hi))
+
+
+class FISS(Technique):
+    """Fixed-increase size chunking (beyond-paper extra; the increasing-
+    chunk family from the DLS literature).  Chunks grow linearly per
+    batch of P requests:
+
+        B      = max(2, ceil(log2(N / P)))        # number of stages
+        c_0    = N / ((2 + B) * P)                # first chunk
+        delta  = 2 * N * (1 - B / (2 + B)) / (P * B * (B - 1))
+        c_j    = c_0 + j * delta
+
+    Rationale (mirrors the paper's selection criteria): early small
+    chunks absorb startup imbalance; later large chunks amortize o_sr.
+    """
+
+    spec = TechniqueSpec("fiss", False, False, "atomic", 2.0)
+
+    def _init(self, **kw):
+        del kw
+        b = max(2, math.ceil(math.log2(max(self.n / max(self.p, 1), 2))))
+        self._b = b
+        self._c0 = max(1.0, self.n / ((2 + b) * self.p))
+        self._delta = (2.0 * self.n * (1.0 - b / (2.0 + b))
+                       / (self.p * b * (b - 1)))
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx // self.p
+
+    def _chunk_size(self, worker: int) -> int:
+        j = min(self.request_idx // self.p, self._b - 1)
+        return max(1, int(math.ceil(self._c0 + j * self._delta)))
+
+
+class VISS(FISS):
+    """Variable-increase size chunking: like FISS but the increment
+    halves every stage (c_j = c_{j-1} + c_0 / 2**j), converging to ~2*c_0
+    — gentler tail growth for irregular loops."""
+
+    spec = TechniqueSpec("viss", False, False, "atomic", 2.0)
+
+    def _chunk_size(self, worker: int) -> int:
+        j = min(self.request_idx // self.p, 30)
+        # c_j = c0 * (1 + sum_{i=1..j} 2^-i) = c0 * (2 - 2^-j)
+        return max(1, int(math.ceil(self._c0 * (2.0 - 2.0 ** (-j)))))
+
+
+# ---------------------------------------------------------------------------
+# Dynamic, adaptive (LB4OMP additions)
+# ---------------------------------------------------------------------------
+
+
+class BOLD(Technique):
+    """BOLD (Hagerup 1997) — overhead-aware, variance-aware factoring that
+    starts *bolder* (larger early chunks) than FAC to cut scheduling rounds.
+
+    Implementation note (see DESIGN.md §8): Hagerup's published strategy
+    keeps a variance "slack" that grows only logarithmically with the
+    remaining work and explicitly charges the per-round overhead h.  We use
+    the LB4OMP-lineage constants
+
+        a  = 2 sigma^2 / mu^2
+        b  = 8 a ln(8 a)          (slack saturation point)
+        c1 = h / (mu ln 2)        (overhead in units of iterations)
+
+    and per request, with Q = remaining and t = Q/P:
+
+        s     = a * ln(min(max(b, e), Q))      # bounded variance slack
+        chunk = t + s/2 - sqrt(s * (t + s/4)) + c1
+
+    i.e. a TAP-shaped reduction whose slack saturates (boldness) plus an
+    additive overhead floor.  Qualitative properties asserted by tests:
+    early chunks >= FAC2's, monotone non-increasing, overhead-aware floor.
+    BOLD is adaptive in that mu/sigma/h may be re-estimated from completed
+    chunks (we update them with Welford online stats).
+    """
+
+    spec = TechniqueSpec("bold", True, True, "atomic", 16.0)
+
+    def _init(self, mu: float = 1.0, sigma: float = 0.0, h: float = 1e-6, **kw):
+        del kw
+        self.mu = max(float(mu), 1e-30)
+        self.sigma = max(float(sigma), 0.0)
+        self.h = max(float(h), 0.0)
+        self._welford_n = 0
+        self._welford_mean = 0.0
+        self._welford_m2 = 0.0
+
+    def _slack(self, q: float) -> float:
+        a = 2.0 * (self.sigma / self.mu) ** 2
+        if a <= 0.0:
+            return 0.0
+        b = 8.0 * a * math.log(max(8.0 * a, 1.0 + 1e-12))
+        cap = max(b, math.e)
+        return a * math.log(min(cap, max(q, math.e)))
+
+    def _chunk_size(self, worker: int) -> int:
+        q = float(self.remaining)
+        t = q / self.p
+        s = self._slack(q)
+        c1 = self.h / (self.mu * math.log(2.0))
+        c = t + s / 2.0 - math.sqrt(s * (t + s / 4.0)) + c1
+        return max(1, int(math.ceil(c)))
+
+    def complete_chunk(self, worker, grant, exec_time, sched_time=0.0):
+        if grant.size <= 0:
+            return
+        per_iter = exec_time / grant.size
+        self._welford_n += 1
+        d = per_iter - self._welford_mean
+        self._welford_mean += d / self._welford_n
+        self._welford_m2 += d * (per_iter - self._welford_mean)
+        if self._welford_n >= max(2, self.p):
+            self.mu = max(self._welford_mean, 1e-30)
+            self.sigma = math.sqrt(self._welford_m2 / (self._welford_n - 1))
+
+
+class _AWFBase(_FactoringBase):
+    """Adaptive weighted factoring family (Banicescu, Velusamy & Devaprasad
+    2003).  FAC2-style batches; worker p's share is scaled by an adaptive
+    weight learned from its measured time-per-iteration:
+
+        pi_p   = (sum of chunk times) / (sum of chunk sizes)   per worker
+        wap_p  = weighted avg of pi_p over adaptation points (recency-
+                 weighted: point k gets weight k)
+        w_p    = P * (1/wap_p) / sum_q (1/wap_q)
+
+    Adaptation cadence differs per variant:
+        AWF   : at time-step boundaries (begin_instance)
+        AWF-B : at batch boundaries            AWF-E : = B + sched overhead
+        AWF-C : at every chunk completion      AWF-D : = C + sched overhead
+    """
+
+    include_overhead = False
+    cadence = "timestep"  # "timestep" | "batch" | "chunk"
+
+    def _init(self, **kw):
+        del kw
+        self.weights = np.ones(self.p, dtype=np.float64)
+        # per-worker accumulators over the current adaptation window
+        self._sum_time = np.zeros(self.p, dtype=np.float64)
+        self._sum_size = np.zeros(self.p, dtype=np.float64)
+        # recency-weighted average state: sum(k * pi_k), sum(k)
+        self._wap_num = np.zeros(self.p, dtype=np.float64)
+        self._wap_den = np.zeros(self.p, dtype=np.float64)
+        self._adapt_k = 0
+        super()._init()
+
+    def _compute_batch_chunk(self, remaining: int, batch: int) -> int:
+        return max(1, math.ceil(remaining / (2.0 * self.p)))
+
+    def _chunk_size(self, worker: int) -> int:
+        return max(1, int(math.ceil(self.weights[worker] * self._batch_chunk)))
+
+    # -- adaptation ----------------------------------------------------------
+    def _adapt(self) -> None:
+        """Fold the current window into wap and refresh weights."""
+        mask = self._sum_size > 0
+        if not np.any(mask):
+            return
+        self._adapt_k += 1
+        k = float(self._adapt_k)
+        pi = np.where(mask, self._sum_time / np.maximum(self._sum_size, 1e-30), 0.0)
+        self._wap_num[mask] += k * pi[mask]
+        self._wap_den[mask] += k
+        self._sum_time[:] = 0.0
+        self._sum_size[:] = 0.0
+        seen = self._wap_den > 0
+        if not np.all(seen):
+            return  # adapt only once every worker has history
+        wap = self._wap_num / self._wap_den
+        wap = np.maximum(wap, 1e-30)
+        inv = 1.0 / wap
+        self.weights = self.p * inv / inv.sum()
+
+    def complete_chunk(self, worker, grant, exec_time, sched_time=0.0):
+        t = exec_time + (sched_time if self.include_overhead else 0.0)
+        self._sum_time[worker] += t
+        self._sum_size[worker] += grant.size
+        if self.cadence == "chunk":
+            self._adapt()
+
+    def _after_grant(self, grant: ChunkGrant) -> None:
+        prev_batch = self._batch
+        super()._after_grant(grant)
+        if self.cadence == "batch" and self._batch != prev_batch:
+            self._adapt()
+
+    def _on_begin_instance(self):
+        if self.cadence == "timestep":
+            self._adapt()
+        super()._on_begin_instance()
+
+
+class AWF(_AWFBase):
+    spec = TechniqueSpec("awf", True, False, "atomic", 6.0)
+    cadence = "timestep"
+
+
+class AWF_B(_AWFBase):
+    spec = TechniqueSpec("awf_b", True, False, "atomic", 6.0)
+    cadence = "batch"
+
+
+class AWF_C(_AWFBase):
+    spec = TechniqueSpec("awf_c", True, False, "atomic", 8.0)
+    cadence = "chunk"
+
+
+class AWF_D(_AWFBase):
+    spec = TechniqueSpec("awf_d", True, False, "atomic", 8.0)
+    cadence = "chunk"
+    include_overhead = True
+
+
+class AWF_E(_AWFBase):
+    spec = TechniqueSpec("awf_e", True, False, "atomic", 6.0)
+    cadence = "batch"
+    include_overhead = True
+
+
+class AF(Technique):
+    """Adaptive factoring (Banicescu & Liu 2000).
+
+    Learns per-worker mean/std of iteration time *during* execution and
+    hands worker p a chunk
+
+        c_p = (D + 2 T R - sqrt(D^2 + 4 D T R)) / (2 mu_p)
+
+    with D = sum_q sigma_q^2 / mu_q, T = 1 / sum_q (1/mu_q), R = remaining.
+    The first chunk per worker is the hard-coded 10-iteration warm-up the
+    paper calls out in Sec. 4.4.
+    """
+
+    spec = TechniqueSpec("af", True, False, "atomic", 24.0)
+    include_overhead = False
+    WARMUP_CHUNK = 10
+
+    def _init(self, **kw):
+        del kw
+        self._cnt = np.zeros(self.p, dtype=np.float64)  # iterations observed
+        self._mean = np.zeros(self.p, dtype=np.float64)
+        self._m2 = np.zeros(self.p, dtype=np.float64)
+        self._warmup_grant = False
+
+    def _warming_up(self, worker: int) -> bool:
+        return self._cnt[worker] < 1
+
+    def _threshold(self, size: int) -> int:
+        # warm-up chunks are "unaffected by the declaration of the chunk
+        # parameter" (paper Sec. 4.4) — handled in _chunk_size via flag
+        if self._warmup_grant:
+            return size
+        return max(size, self.chunk_param)
+
+    def _chunk_size(self, worker: int) -> int:
+        self._warmup_grant = False
+        if self._warming_up(worker) or np.any(self._cnt < 1):
+            self._warmup_grant = True
+            return min(self.WARMUP_CHUNK, max(1, self.remaining))
+        mu = np.maximum(self._mean, 1e-30)
+        var = np.where(self._cnt > 1, self._m2 / np.maximum(self._cnt - 1.0, 1.0), 0.0)
+        d = float(np.sum(var / mu))
+        t = 1.0 / float(np.sum(1.0 / mu))
+        r = float(self.remaining)
+        c = (d + 2.0 * t * r - math.sqrt(d * d + 4.0 * d * t * r)) / (2.0 * mu[worker])
+        # guard: never exceed the GSS envelope R/P — warm-up mu estimates
+        # are 10-sample noisy and the first post-warm-up requester is
+        # precisely the worker whose mu is most underestimated (selection
+        # effect); unbounded, it would grab >1x its fair share in one chunk.
+        c = min(c, math.ceil(r / self.p))
+        return max(1, int(math.ceil(c)))
+
+    def complete_chunk(self, worker, grant, exec_time, sched_time=0.0):
+        if grant.size <= 0:
+            return
+        t = exec_time + (sched_time if self.include_overhead else 0.0)
+        per_iter = t / grant.size
+        # size-weighted Welford: a chunk of k iterations contributes k
+        # observations of its mean per-iteration time (the only quantity the
+        # RTL can measure, cf. LB4OMP's RDTSCP chunk timers)
+        k = float(grant.size)
+        self._cnt[worker] += k
+        d = per_iter - self._mean[worker]
+        self._mean[worker] += d * k / self._cnt[worker]
+        self._m2[worker] += k * d * (per_iter - self._mean[worker])
+
+
+class MAF(AF):
+    """mAF — LB4OMP's improvement of AF (Sec. 3.1): per-chunk timings also
+    include the scheduling overhead, so the estimator sees the *true* cost
+    per iteration and grows chunks to amortize o_cs."""
+
+    spec = TechniqueSpec("maf", True, False, "atomic", 24.0)
+    include_overhead = True
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+TECHNIQUES: dict[str, type[Technique]] = {
+    "static": Static,
+    "ss": SelfScheduling,
+    "gss": GSS,
+    "tss": TSS,
+    "fsc": FSC,
+    "fac": FAC,
+    "mfac": MFAC,
+    "fac2": FAC2,
+    "wf2": WF2,
+    "tap": TAP,
+    "bold": BOLD,
+    "awf": AWF,
+    "awf_b": AWF_B,
+    "awf_c": AWF_C,
+    "awf_d": AWF_D,
+    "awf_e": AWF_E,
+    "af": AF,
+    "maf": MAF,
+    # beyond-paper extras (same selection criteria, Sec. 2)
+    "tfss": TFSS,
+    "rand": Rand,
+    "fiss": FISS,
+    "viss": VISS,
+}
+
+ADAPTIVE_TECHNIQUES = tuple(
+    k for k, v in TECHNIQUES.items() if v.spec.adaptive
+)
+NONADAPTIVE_TECHNIQUES = tuple(
+    k for k, v in TECHNIQUES.items() if not v.spec.adaptive
+)
+PROFILING_TECHNIQUES = tuple(
+    k for k, v in TECHNIQUES.items() if v.spec.requires_profiling
+)
+
+# The 14 techniques the paper counts as LB4OMP's additions.
+PAPER_LB4OMP_SET = (
+    "fsc", "fac", "fac2", "tap", "wf2", "mfac",
+    "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
+)
+
+
+def make_technique(name: str, n: int, p: int, chunk_param: int = 1, **kw) -> Technique:
+    """Factory: ``make_technique("fac2", n=10**6, p=20, chunk_param=97)``."""
+    key = name.lower().replace("-", "_")
+    if key not in TECHNIQUES:
+        raise KeyError(f"unknown technique {name!r}; known: {sorted(TECHNIQUES)}")
+    return TECHNIQUES[key](n=n, p=p, chunk_param=chunk_param, **kw)

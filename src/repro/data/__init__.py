@@ -1,0 +1,3 @@
+"""Synthetic corpus + DLS-packed batching."""
+
+from .pipeline import DataConfig, DataLoader, SyntheticCorpus, pack_documents  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated interpret=True on CPU).
+
+flash_attention/  BlockSpec-tiled online-softmax attention
+grouped_matmul/   DLS-planned expert-tile matmul (megablox-style)
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit
+wrapper), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,143 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native tiling: the grid is (batch*heads, q_blocks, kv_blocks) with the
+kv dimension innermost — TPU executes the grid sequentially minor-to-major,
+so the online-softmax running state (m, l, acc) lives in VMEM scratch and
+is carried across kv steps of one q block.  Causal (and sliding-window)
+masking skips fully-masked kv blocks via pl.when, which on real hardware
+elides both the DMA wait and the MXU work for the upper triangle — this is
+the half of the quadratic that the pure-JAX reference (models/attention
+_attend_flash) cannot avoid under XLA, and the main perf argument for the
+kernel (see EXPERIMENTS.md §Perf).
+
+Block shapes are MXU-aligned (multiples of 128 on the contracted dims;
+block_q x block_k tiles in VMEM).  VMEM budget per grid step:
+    q (bq, hd) + k (bk, hd) + v (bk, hd) + acc (bq, hd) + m/l (bq)
+with bq = bk = 512, hd <= 256 in fp32 scratch ~= 1.6 MiB — well inside the
+~16 MiB/core VMEM of v5e.
+
+Validated in interpret mode against ref.py (tests/test_kernels_flash.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # a kv block is live unless it is entirely above the causal diagonal
+    # (or entirely outside the sliding window)
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = jnp.logical_and(live,
+                               q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < seq_len
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         block_q: int = 512, block_k: int = 512,
+                         interpret: bool = False):
+    """q, k, v: (bh, s, hd) with KV already broadcast to the q-head count.
+
+    Returns (bh, s, hd).  s is padded to the block size internally.
+    """
+    bh, s, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, max(s, 8))
+    block_k = min(block_k, max(s, 8))
+    nq = -(-s // block_q)
+    nk = -(-s // block_k)
+    pad_q = nq * block_q - s
+    pad_k = nk * block_k - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=s,
+        causal=causal, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pl.MemorySpace.ANY if False else _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s, :]
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - fallback for interpret-only envs
+        return pl.MemorySpace.ANY(shape, dtype)  # type: ignore

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel.
+
+`flash_attention` accepts model-layout tensors (b, s, h, hd) with separate
+kv-head counts (GQA/MQA) and handles head broadcast, flattening, padding,
+and the interpret-mode switch (CPU validation vs TPU execution).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _is_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None):
+    """q: (b, s, h, hd); k, v: (b, s, kvh, hd) -> (b, s, h, hd)."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        g = h // kvh
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (b, s, kvh, g, hd)).reshape(b, s, h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (b, s, kvh, g, hd)).reshape(b, s, h, hd)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    out = flash_attention_bhsd(flat(q), flat(k), flat(v), causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q, k, v: (bh, s, hd) -> (bh, s, hd), fp32 math."""
+    bh, s, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window > 0:
+        mask &= (i[:, None] - i[None, :]) < window
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

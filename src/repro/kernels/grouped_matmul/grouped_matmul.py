@@ -1,0 +1,70 @@
+"""Pallas TPU grouped (expert-tile) matmul with a DLS-planned work list.
+
+The MoE expert FFN is a ragged batch of matmuls: expert e owns rows[e]
+tokens (rows vary per step — the load imbalance LB4OMP addresses).  On
+TPU the grid is executed sequentially per core, so raggedness shows up as
+idle tail steps unless the *work list* is balanced.
+
+This kernel is megablox-shaped: a 1-D grid over row-block tiles, with
+scalar-prefetch descriptor arrays (expert id + row offset per tile) that
+the BlockSpec index_maps consume to pick the right expert weight block and
+x rows.  The descriptor order is produced by the DLS planner
+(`repro.balance.moe.plan_tiles`): chunk-calculated (FAC2/WF-weighted)
+interleaving of expert tiles, so that when the grid is split across cores
+each core's share of tiles has near-equal work — the paper's chunk
+calculus applied to MXU tiles.
+
+VMEM per step: x (bm, d) + w (d, bn) + out (bm, bn); bm = 128-aligned
+rows, bn = the expert FFN width block.
+
+Validated in interpret mode against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(eid_ref, x_ref, w_ref, out_ref, *, block_rows: int):
+    # eid_ref is the scalar-prefetch ref (consumed by index maps); the
+    # body itself is a plain MXU tile: out = x @ w
+    del eid_ref
+    x = x_ref[0]
+    w = w_ref[0]
+    out_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def grouped_matmul_tiles(x_tiles, weights, tile_expert, *,
+                         interpret: bool = False):
+    """x_tiles: (T, bm, d) row tiles; weights: (E, d, f);
+    tile_expert: (T,) int32 expert id per tile -> out (T, bm, f).
+
+    The tile order (DLS-planned) is the caller's; the kernel only follows
+    the descriptor array.
+    """
+    t, bm, d = x_tiles.shape
+    e, _, f = weights.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda i, eid: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i, eid: (eid[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, f), lambda i, eid: (i, 0, 0)),
+    )
+    kernel = functools.partial(_gmm_kernel, block_rows=bm)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, bm, f), x_tiles.dtype),
+        interpret=interpret,
+    )(tile_expert, x_tiles, weights)

@@ -1,0 +1,52 @@
+"""Jit'd wrapper: expert-capacity layout (E, C, d) -> DLS-planned tiles ->
+grouped matmul -> (E, C, f).
+
+`moe_expert_ffn` is the kernel-backed equivalent of the einsum in
+models.moe._expert_ffn's ragged path: the (E, C) capacity buffer is cut
+into row tiles of `block_rows`, the tile list is ordered by the DLS
+planner (see repro.balance.moe.plan_tiles), and each tile hits the MXU
+against its expert's weights.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .grouped_matmul import grouped_matmul_tiles
+
+
+def _is_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def grouped_matmul(xe, weights, tile_order=None, *, block_rows: int = 128,
+                   interpret: bool | None = None):
+    """xe: (E, C, d) capacity layout; weights (E, d, f) -> (E, C, f).
+
+    tile_order: optional (T,) permutation of tile ids from the DLS
+    planner (T = E * C / block_rows); identity if omitted.
+    """
+    if interpret is None:
+        interpret = not _is_tpu()
+    e, c, d = xe.shape
+    f = weights.shape[2]
+    assert c % block_rows == 0, (c, block_rows)
+    tiles_per_e = c // block_rows
+    t = e * tiles_per_e
+    x_tiles = xe.reshape(t, block_rows, d)
+    tile_expert = (jnp.arange(t, dtype=jnp.int32) // tiles_per_e)
+    if tile_order is not None:
+        x_tiles = x_tiles[tile_order]
+        tile_expert = tile_expert[tile_order]
+    out = grouped_matmul_tiles(x_tiles, weights, tile_expert,
+                               interpret=interpret)
+    if tile_order is not None:
+        inv = jnp.zeros_like(tile_order).at[tile_order].set(
+            jnp.arange(t, dtype=tile_order.dtype))
+        out = out[inv]
+    return out.reshape(e, c, f)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the grouped expert-tile matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x_tiles, weights, tile_expert):
+    """x_tiles (T, bm, d), weights (E, d, f), tile_expert (T,) ->
+    (T, bm, f): each tile multiplied by its expert's weight."""
+    w_sel = weights[tile_expert]                       # (T, d, f)
+    return jnp.einsum("tbd,tdf->tbf",
+                      x_tiles.astype(jnp.float32),
+                      w_sel.astype(jnp.float32)).astype(x_tiles.dtype)

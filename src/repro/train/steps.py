@@ -1,0 +1,107 @@
+"""Training and serving step functions (the jit roots for the dry-run).
+
+`make_train_step` builds the full production step: loss -> grads (with
+optional microbatch gradient accumulation over a DLS-planned split) ->
+clip -> AdamW -> donated update.  `make_serve_step` is the single-token
+decode step against a full cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, loss_fn
+from ..optim.adamw import AdamWState, OptimizerConfig, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig,
+                    num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch: {'tokens': (B, S), 'labels': (B, S)[, 'prefix_embed']}
+
+    With num_microbatches > 1, the global batch is split on the batch axis
+    and gradients are accumulated under a lax.scan — the in-graph half of
+    the DLS microbatch planner (the host half re-plans the split between
+    steps from measured times; see balance/accum.py).
+    """
+
+    def loss_of(params, tokens, labels, prefix):
+        return loss_fn(params, cfg, tokens, labels, prefix)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        prefix = batch.get("prefix_embed")
+        if num_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, tokens, labels, prefix)
+        else:
+            b = tokens.shape[0]
+            assert b % num_microbatches == 0
+            mb = b // num_microbatches
+
+            def split(x):
+                return x.reshape((num_microbatches, mb) + x.shape[1:])
+
+            mtoks, mlabels = split(tokens), split(labels)
+            mprefix = split(prefix) if prefix is not None else None
+
+            def body(acc, inp):
+                g_acc, l_acc = acc
+                if mprefix is not None:
+                    t, l, pf = inp
+                else:
+                    t, l = inp
+                    pf = None
+                (loss, _m), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, t, l, pf)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (mtoks, mlabels, mprefix) if mprefix is not None else (
+                mtoks, mlabels)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), xs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        out = {"loss": loss, **{k: v for k, v in metrics.items()},
+               **opt_metrics}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """Forward-only prefill returning last-position logits (b, v)."""
+    from ..models import forward
+
+    def prefill_step(params, batch):
+        logits, _aux = forward(params, cfg, batch["tokens"],
+                               batch.get("prefix_embed"))
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, sample: bool = False, temperature: float = 1.0):
+    """One decode step: (params, state, tokens (b,1), rng) ->
+    (next_tokens (b,1), new_state)."""
+
+    def serve_step(params, state, tokens, rng):
+        logits, new_state = decode_step(params, cfg, state, tokens)
+        logits = logits[:, -1, :]
+        if sample:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), new_state
+
+    return serve_step

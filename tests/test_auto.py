@@ -1,0 +1,63 @@
+"""Auto technique selection (the paper's future work, implemented)."""
+
+import numpy as np
+import pytest
+
+from repro.core import NOISY_PROFILE, AutoSelector, auto_simulate
+from repro.core.auto import DEFAULT_CANDIDATES
+from repro.core import gromacs_like, sphynx_like, simulate
+
+
+def test_selector_explores_all_candidates_first():
+    sel = AutoSelector(candidates=("static", "gss", "fac2"), policy="ucb")
+    seen = set()
+    for _ in range(3):
+        t = sel.choose()
+        seen.add(t)
+        sel.record(t, 1.0)
+    assert seen == {"static", "gss", "fac2"}
+
+
+def test_selector_commits_to_best():
+    sel = AutoSelector(candidates=("a", "b"), policy="explore_commit",
+                       explore_steps=2)
+    times = {"a": 2.0, "b": 1.0}
+    for _ in range(10):
+        t = sel.choose()
+        sel.record(t, times[t])
+    assert sel.best == "b"
+    assert sel.choose() == "b"
+
+
+def test_auto_picks_static_on_fine_regular_loop():
+    w = gromacs_like(n=30_000)
+    sel, hist = auto_simulate(w, p=20, timesteps=25, profile=NOISY_PROFILE)
+    assert sel.best == "static"
+    # UCB keeps occasionally exploring near-ties (static vs gss differ by
+    # ~3% here); what must hold: the pathological arm (ss: 5x slower) is
+    # never re-pulled after its first sample
+    ss_pulls = sum(1 for h in hist if h["technique"] == "ss")
+    assert ss_pulls == 1
+
+
+def test_auto_beats_static_under_heterogeneity():
+    w = sphynx_like(n=30_000)
+    speeds = np.ones(20)
+    speeds[:5] = 2.0
+    sel, hist = auto_simulate(w, p=20, timesteps=30, speeds=speeds)
+    static_t = simulate("static", w, p=20, speeds=speeds)[0].record.t_par
+    tail = np.mean([h["t_par"] for h in hist[-8:]])
+    assert tail < 0.8 * static_t
+    assert sel.best != "static"
+
+
+def test_fiss_viss_increasing_and_valid():
+    from repro.core import plan_schedule
+
+    for t in ("fiss", "viss"):
+        plan = plan_schedule(t, n=50_000, p=8)
+        plan.validate()
+        sizes = [c.size for c in plan.chunks]
+        # increasing until the tail clamp
+        body = sizes[: -2 * 8]
+        assert all(a <= b for a, b in zip(body, body[1:])), t

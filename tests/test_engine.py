@@ -1,0 +1,72 @@
+"""DecodeEngine: real continuous batching over the model with DLS
+admission — including the lane-isolation property that motivated
+per-lane cache positions."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import init_decoder
+from repro.serve.engine import DecodeEngine
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(smoke_config(ARCHS["qwen3-4b"]),
+                              prefix_len=0, compute_dtype="float32")
+    params, _ = init_decoder(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _req(rid, prompt_len=6, new=8):
+    return Request(rid=rid, arrival=0.0, prompt_len=prompt_len,
+                   max_new_tokens=new)
+
+
+def test_engine_completes_all_requests(model):
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=4, max_len=64)
+    for i in range(10):
+        eng.submit(_req(i))
+    stats = eng.run()
+    assert stats.completed == 10
+    for i in range(10):
+        out = eng.output(i)
+        assert len(out) == 8
+        assert all(0 <= t < cfg.padded_vocab for t in out)
+
+
+def test_engine_lane_isolation(model):
+    """A request decoded after another request freed its lane must produce
+    the same tokens as the same request decoded alone — per-lane positions
+    keep stale cache entries invisible."""
+    cfg, params = model
+    prompt = list(np.random.default_rng(7).integers(2, 200, 6))
+
+    # alone: single-slot engine, only request B
+    eng_alone = DecodeEngine(cfg, params, slots=1, max_len=64)
+    eng_alone.submit(_req(100), prompt=prompt)
+    eng_alone.run()
+    alone = eng_alone.output(100)
+
+    # after A: same slot runs a different request first
+    eng_seq = DecodeEngine(cfg, params, slots=1, max_len=64)
+    eng_seq.submit(_req(99), prompt=list(
+        np.random.default_rng(3).integers(2, 200, 10)))
+    eng_seq.submit(_req(100), prompt=prompt)
+    eng_seq.run()
+    assert eng_seq.output(100) == alone
+
+
+def test_engine_dls_admission_pulls_chunks(model):
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64, technique="gss")
+    for i in range(6):
+        eng.submit(_req(i, new=4))
+    stats = eng.run()
+    assert stats.completed == 6
+    assert stats.tokens == 24

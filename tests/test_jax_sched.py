@@ -1,0 +1,199 @@
+"""Agreement tests: the in-graph JAX planner (core.jax_sched) must match
+the reference technique implementations, plus property tests (hypothesis)
+on schedule invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TECHNIQUES, make_technique, plan_schedule
+from repro.core.jax_sched import (
+    af_chunk,
+    af_init,
+    af_update,
+    awf_update,
+    balanced_assignment,
+    max_chunks_bound,
+    plan_chunks,
+)
+
+PLANNABLE = ("static", "ss", "gss", "tss", "fac2", "fac", "mfac", "tap", "fsc")
+
+
+def _ref_sizes(name, n, p, cp, **kw):
+    plan = plan_schedule(name, n=n, p=p, chunk_param=cp, **kw)
+    return [c.size for c in plan.chunks]
+
+
+@pytest.mark.parametrize("name", PLANNABLE)
+@pytest.mark.parametrize("n,p,cp", [(1000, 4, 1), (10_007, 16, 1),
+                                    (5000, 7, 13), (64, 64, 1)])
+def test_plan_chunks_matches_reference(name, n, p, cp):
+    kw = {}
+    if TECHNIQUES[name].spec.requires_profiling:
+        kw = dict(mu=1.0, sigma=0.4, h=1e-6)
+    ref = _ref_sizes(name, n, p, cp, **kw)
+    sizes, starts, count = jax.jit(
+        lambda: plan_chunks(name, n, p, cp, **kw)
+    )()
+    count = int(count)
+    got = list(np.asarray(sizes)[:count])
+    assert got == ref, f"{name}: {got[:8]}... vs {ref[:8]}..."
+    # starts are the prefix sums
+    np.testing.assert_array_equal(
+        np.asarray(starts)[:count],
+        np.concatenate([[0], np.cumsum(got)[:-1]]),
+    )
+    assert sum(got) == n
+
+
+def test_plan_chunks_wf2_weighted_round_robin():
+    n, p = 10_000, 4
+    w = np.array([2.0, 1.0, 1.0, 0.5])
+    ref = _ref_sizes("wf2", n, p, 1, weights=list(w))
+    sizes, _, count = plan_chunks("wf2", n, p, 1, weights=jnp.asarray(w))
+    got = list(np.asarray(sizes)[: int(count)])
+    assert got == ref
+
+
+def test_max_chunks_bound_is_sufficient():
+    for name in PLANNABLE:
+        kw = {}
+        if TECHNIQUES[name].spec.requires_profiling:
+            kw = dict(mu=1.0, sigma=0.4, h=1e-6)
+        for n, p in [(100, 3), (99_991, 32)]:
+            ref = _ref_sizes(name, n, p, 1, **kw)
+            assert len(ref) <= max_chunks_bound(name, n, p, 1)
+
+
+def test_awf_update_matches_reference():
+    p = 6
+    t = make_technique("awf_b", n=100_000, p=p)
+    wap_num = jnp.zeros(p)
+    wap_den = jnp.zeros(p)
+    k = jnp.asarray(0, jnp.int32)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        times = rng.uniform(0.5, 2.0, p).astype(np.float32)
+        sizes = rng.integers(10, 100, p).astype(np.float32)
+        # reference path
+        t._sum_time[:] = times
+        t._sum_size[:] = sizes
+        t._adapt()
+        # jax path
+        w, wap_num, wap_den, k = awf_update(
+            wap_num, wap_den, k, jnp.asarray(times), jnp.asarray(sizes)
+        )
+    np.testing.assert_allclose(np.asarray(w), t.weights, rtol=1e-5)
+    assert np.isclose(float(jnp.sum(w)), p, rtol=1e-5)
+
+
+def test_af_state_matches_reference():
+    p = 4
+    ref = make_technique("af", n=1_000_000, p=p)
+    s = af_init(p)
+    rng = np.random.default_rng(1)
+    for rounds in range(3):
+        per_iter = rng.uniform(0.5, 2.0, p)
+        times = np.zeros(p)
+        sizes = np.zeros(p)
+        for i in range(p):
+            g = ref.next_chunk(i)
+            sizes[i] = g.size
+            times[i] = per_iter[i] * g.size
+            ref.complete_chunk(i, g, exec_time=float(times[i]))
+        s = af_update(s, jnp.asarray(times, jnp.float32),
+                      jnp.asarray(sizes, jnp.float32))
+    np.testing.assert_allclose(np.asarray(s.mean), ref._mean, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s.cnt), ref._cnt, rtol=1e-6)
+    c = af_chunk(s, jnp.asarray(float(ref.remaining)))
+    # jax chunk rule should be within the GSS envelope and positive
+    assert int(jnp.max(c)) <= math.ceil(ref.remaining / p) + 1
+    assert int(jnp.min(c)) >= 1
+
+
+def test_balanced_assignment_covers_and_balances():
+    rng = np.random.default_rng(0)
+    costs = jnp.asarray(rng.lognormal(0, 1, 512).astype(np.float32))
+    assign = balanced_assignment(costs, p=8)
+    assert assign.shape == (512,)
+    assert int(jnp.min(assign)) >= 0 and int(jnp.max(assign)) <= 7
+    loads = np.zeros(8)
+    np.add.at(loads, np.asarray(assign), np.asarray(costs))
+    # LPT guarantee: max load <= (4/3 + eps) * mean for many items
+    assert loads.max() <= 1.4 * loads.mean()
+
+
+def test_balanced_assignment_respects_weights():
+    costs = jnp.ones(100, jnp.float32)
+    w = jnp.asarray([3.0, 1.0], jnp.float32)
+    assign = balanced_assignment(costs, p=2, weights=w)
+    n0 = int(jnp.sum((assign == 0).astype(jnp.int32)))
+    assert 65 <= n0 <= 85  # ~75 items to the 3x-weighted worker
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    name=st.sampled_from(sorted(TECHNIQUES)),
+    n=st.integers(min_value=1, max_value=5000),
+    p=st.integers(min_value=1, max_value=64),
+    cp=st.integers(min_value=1, max_value=200),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_schedule_partition(name, n, p, cp):
+    """Invariant: every technique partitions [0, n) exactly, any params."""
+    kw = {}
+    if TECHNIQUES[name].spec.requires_profiling:
+        kw = dict(mu=1.0, sigma=0.5, h=1e-6)
+    plan = plan_schedule(name, n=n, p=p, chunk_param=cp, **kw)
+    plan.validate()
+
+
+@given(
+    n=st.integers(min_value=10, max_value=100_000),
+    p=st.integers(min_value=2, max_value=128),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_gss_tss_nonincreasing(n, p):
+    for name in ("gss", "tss"):
+        sizes = [c.size for c in plan_schedule(name, n=n, p=p).chunks]
+        assert all(a >= b for a, b in zip(sizes, sizes[1:])), name
+
+
+@given(
+    n=st.integers(min_value=100, max_value=50_000),
+    p=st.integers(min_value=2, max_value=32),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_af_adapts_inverse_to_speed(n, p, seed):
+    """AF chunk sizes must order inversely to per-worker mean times."""
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(1.0, 4.0, p)
+    t = make_technique("af", n=n, p=p)
+    for i in range(p):
+        g = t.next_chunk(i)
+        if g is None:
+            return  # tiny n exhausted during warm-up — nothing to check
+        t.complete_chunk(i, g, exec_time=float(speeds[i]) * g.size)
+    if t.remaining < p * 20:
+        return
+    # query the fastest worker first (larger remaining => larger GSS
+    # envelope), then the slowest: fast must still get the bigger chunk
+    fastest = int(np.argmin(speeds))
+    slowest = int(np.argmax(speeds))
+    if fastest == slowest:
+        return
+    g_fast = t.next_chunk(fastest)
+    g_slow = t.next_chunk(slowest)
+    if g_fast is None or g_slow is None:
+        return
+    assert g_fast.size >= g_slow.size

@@ -1,0 +1,157 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps against
+the pure-jnp oracles in ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+from repro.balance.moe import plan_tiles
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_qkv(b, s, h, kvh, hd, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, kvh, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, kvh, hd)), dtype)
+    return q, k, v
+
+
+def _ref_gqa(q, k, v, window=0):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kr = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, g, hd)).reshape(
+        b, s, h, hd)
+    vr = jnp.broadcast_to(v[:, :, :, None, :], (b, s, kvh, g, hd)).reshape(
+        b, s, h, hd)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    out = attention_ref(flat(q), flat(kr), flat(vr), window=window)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 2, 2, 64),     # MHA, exact blocks
+    (2, 300, 4, 2, 64),     # GQA, ragged seq
+    (1, 513, 2, 1, 128),    # MQA, off-by-one seq
+    (1, 64, 8, 4, 32),      # small head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_matches_ref(shape, dtype):
+    b, s, h, kvh, hd = shape
+    q, k, v = _mk_qkv(b, s, h, kvh, hd, dtype)
+    out = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    ref = _ref_gqa(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_kernel_sliding_window(window):
+    q, k, v = _mk_qkv(1, 300, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    ref = _ref_gqa(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (128, 64), (256, 256)])
+def test_flash_kernel_block_shape_sweep(blocks):
+    bq, bk = blocks
+    q, k, v = _mk_qkv(1, 384, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    ref = _ref_gqa(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_kernel_matches_model_flash_path():
+    """The in-model lax.scan flash and the Pallas kernel agree."""
+    from repro.models.attention import _attend_flash
+    import dataclasses
+    from repro.configs import ARCHS, smoke_config
+
+    cfg = dataclasses.replace(smoke_config(ARCHS["qwen3-4b"]),
+                              compute_dtype="float32")
+    q, k, v = _mk_qkv(2, 256, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.resolved_head_dim, jnp.float32)
+    model_out = _attend_flash(q, k, v, cfg, window=0, block=64)
+    kern_out = flash_attention(q, k, v, block_q=64, block_k=64,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern_out),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("e,c,d,f,bm", [
+    (4, 32, 64, 96, 8),
+    (8, 64, 128, 64, 16),
+    (2, 16, 32, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_matches_ref(e, c, d, f, bm, dtype):
+    xe = jnp.asarray(RNG.normal(size=(e, c, d)), dtype)
+    w = jnp.asarray(RNG.normal(size=(e, d, f)) * 0.1, dtype)
+    out = grouped_matmul(xe, w, block_rows=bm, interpret=True)
+    tiles_per_e = c // bm
+    t = e * tiles_per_e
+    ref = grouped_matmul_ref(xe.reshape(t, bm, d), w,
+                             jnp.arange(t, dtype=jnp.int32) // tiles_per_e
+                             ).reshape(e, c, f)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_grouped_matmul_with_dls_tile_order():
+    """A DLS-planned permutation must not change the result."""
+    e, c, d, f, bm = 4, 32, 64, 48, 8
+    xe = jnp.asarray(RNG.normal(size=(e, c, d)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    rows = np.array([32, 8, 16, 24])
+    order = plan_tiles(rows, block_rows=bm, p=4)
+    # plan over the real capacity layout
+    assert order.shape[0] == e * (c // bm)
+    out_planned = grouped_matmul(xe, w, tile_order=jnp.asarray(order),
+                                 block_rows=bm, interpret=True)
+    out_plain = grouped_matmul(xe, w, block_rows=bm, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_planned),
+                               np.asarray(out_plain), atol=1e-5)
+
+
+def test_plan_tiles_balances_ragged_load():
+    """Sequential P-way split of the planned tile list must be more
+    balanced than the naive expert-major order."""
+    rng = np.random.default_rng(3)
+    e, bm, p = 32, 8, 8
+    rows = rng.integers(0, 256, e)
+    rows[0] = 256  # one hot expert
+    order = plan_tiles(rows, block_rows=bm, p=p)
+    cap_tiles = int(np.ceil(rows.max() / bm))
+    live = int(sum(int(np.ceil(r / bm)) for r in rows))
+
+    def split_imbalance(tile_list):
+        # work per tile = 1 for live tiles, 0 for padding tiles
+        live_set = set()
+        for ei in range(e):
+            for j in range(int(np.ceil(rows[ei] / bm))):
+                live_set.add(ei * cap_tiles + j)
+        shares = np.array_split(tile_list, p)
+        loads = [sum(1 for t in s if int(t) in live_set) for s in shares]
+        return max(loads) - min(loads)
+
+    naive = np.arange(e * cap_tiles)
+    assert split_imbalance(order[:live]) <= split_imbalance(naive)

@@ -1,0 +1,98 @@
+"""System-level property tests (hypothesis): invariants that must hold
+for ANY technique / workload / worker count."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TECHNIQUES, Workload, simulate
+from repro.core.simulator import OverheadModel
+
+
+def _workload(n, seed, scale=1e-5):
+    rng = np.random.default_rng(seed)
+    costs = rng.lognormal(0, 0.7, n) * scale
+    return Workload(name=f"prop-{seed}", costs=costs, meta={})
+
+
+SIM_TECHS = sorted(t for t in TECHNIQUES if t != "ss")  # ss = n events, slow
+
+
+@given(
+    name=st.sampled_from(SIM_TECHS),
+    n=st.integers(min_value=10, max_value=3000),
+    p=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=99),
+)
+@settings(max_examples=40, deadline=None)
+def test_work_conservation(name, n, p, seed):
+    """Total busy (exec) time across workers == total workload cost —
+    no iteration lost or duplicated, for any technique/shape."""
+    w = _workload(n, seed)
+    rec = simulate(name, w, p=p)[0].record
+    busy_exec = rec.thread_times.sum() - rec.sched_time
+    assert busy_exec == pytest.approx(w.total, rel=1e-9)
+
+
+@given(
+    name=st.sampled_from(SIM_TECHS),
+    n=st.integers(min_value=50, max_value=2000),
+    p=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=99),
+)
+@settings(max_examples=30, deadline=None)
+def test_t_par_bounds(name, n, p, seed):
+    """T_par is bounded below by max(total/P, max_iter_cost) and above by
+    the serial time plus scheduling overheads."""
+    w = _workload(n, seed)
+    rec = simulate(name, w, p=p)[0].record
+    lower = max(w.total / p, w.costs.max())
+    assert rec.t_par >= lower * (1 - 1e-9)
+    assert rec.t_par <= w.total + rec.sched_time + 1e-6
+
+
+@given(
+    n=st.integers(min_value=100, max_value=2000),
+    p=st.integers(min_value=2, max_value=16),
+    seed=st.integers(min_value=0, max_value=50),
+)
+@settings(max_examples=20, deadline=None)
+def test_percent_imbalance_in_range(n, p, seed):
+    w = _workload(n, seed)
+    for name in ("static", "gss", "fac2", "af"):
+        rec = simulate(name, w, p=p)[0].record
+        assert 0.0 <= rec.percent_imbalance <= 100.0 + 1e-9
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=20),
+    p=st.integers(min_value=2, max_value=12),
+)
+@settings(max_examples=15, deadline=None)
+def test_simulation_deterministic(seed, p):
+    """Same inputs -> identical records (reproducibility invariant)."""
+    w = _workload(500, seed)
+    a = simulate("awf_b", w, p=p, timesteps=2)[1].record
+    b = simulate("awf_b", w, p=p, timesteps=2)[1].record
+    assert a.t_par == b.t_par
+    np.testing.assert_array_equal(a.thread_times, b.thread_times)
+
+
+@given(
+    n=st.integers(min_value=200, max_value=2000),
+    factor=st.floats(min_value=2.0, max_value=20.0),
+)
+@settings(max_examples=15, deadline=None)
+def test_higher_overhead_never_helps(n, factor):
+    """Scaling every scheduling cost up cannot reduce T_par (sanity of the
+    overhead model)."""
+    w = _workload(n, 0)
+    base = OverheadModel()
+    hi = OverheadModel(o_atomic=base.o_atomic * factor,
+                       o_mutex_acquire=base.o_mutex_acquire * factor,
+                       o_unit=base.o_unit * factor,
+                       o_dispatch=base.o_dispatch * factor)
+    for name in ("gss", "fac2"):
+        t0 = simulate(name, w, p=8, overhead=base)[0].record.t_par
+        t1 = simulate(name, w, p=8, overhead=hi)[0].record.t_par
+        assert t1 >= t0 * (1 - 1e-9)

@@ -1,0 +1,175 @@
+"""Integration tests: the simulator must reproduce the paper's findings
+(Sec. 4 performance analysis campaign). Each test is tagged with the claim
+it validates."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    NOISY_PROFILE,
+    best_combination,
+    dist_loop,
+    frontloaded_like,
+    gromacs_like,
+    simulate,
+    sphynx_like,
+    LoopRecorder,
+)
+
+P = 20  # miniHPC-Broadwell thread count used throughout the paper's figures
+
+
+@pytest.fixture(scope="module")
+def sphynx():
+    return sphynx_like(n=50_000)
+
+
+@pytest.fixture(scope="module")
+def gromacs():
+    return gromacs_like(n=50_000)
+
+
+def test_ss_near_perfect_balance_on_irregular(sphynx):
+    """Claim (Sec. 3.1): SS achieves highly load-balanced execution in
+    highly irregular environments — at the highest scheduling overhead."""
+    ss = simulate("ss", sphynx, p=P)[0].record
+    static = simulate("static", sphynx, p=P)[0].record
+    assert ss.percent_imbalance < 1.0
+    assert ss.n_chunks == sphynx.n  # o_sr == N
+    assert ss.percent_imbalance < static.percent_imbalance
+
+
+def test_static_lowest_overhead(gromacs):
+    """Claim (Fig. 7): STATIC has the smallest scheduling overhead
+    (o_sr == P, o_sync == 0) and wins on fine-granularity regular loops."""
+    recs = {
+        t: simulate(t, gromacs, p=P, numa_penalty=0.6, profile=NOISY_PROFILE)[0].record
+        for t in ("static", "ss", "gss", "fac2", "af")
+    }
+    t_static = recs["static"].t_par
+    assert all(r.t_par >= t_static for r in recs.values())
+    assert recs["static"].n_chunks == P
+
+
+def test_fac_catastrophic_and_mfac_cheaper(gromacs):
+    """Claims (Fig. 7): FAC shows extreme overhead on fine loops (mutex +
+    degenerate small chunks from noisy profiling); mFAC is strictly
+    cheaper by replacing the mutex with atomic recomputation; both may
+    exceed even SS's overhead."""
+    kw = dict(p=P, numa_penalty=0.6, profile=NOISY_PROFILE)
+    fac = simulate("fac", gromacs, **kw)[0].record
+    mfac = simulate("mfac", gromacs, **kw)[0].record
+    ss = simulate("ss", gromacs, **kw)[0].record
+    static = simulate("static", gromacs, **kw)[0].record
+    assert fac.t_par > 3 * static.t_par          # catastrophic vs STATIC
+    assert mfac.t_par < 0.5 * fac.t_par          # mFAC ≪ FAC
+    assert fac.t_par > ss.t_par                  # 'higher overhead than SS'
+    # same chunk values => same o_sr; the delta is pure o_sync
+    assert fac.n_chunks == mfac.n_chunks
+
+
+def test_tap_fails_on_fine_granularity(gromacs):
+    """Claim (Fig. 7): TAP fails to calculate an appropriate chunk size
+    from noisy profiling on very fine iterations -> o_sr explodes."""
+    tap = simulate("tap", gromacs, p=P, profile=NOISY_PROFILE)[0].record
+    gss = simulate("gss", gromacs, p=P, profile=NOISY_PROFILE)[0].record
+    assert tap.n_chunks > 50 * gss.n_chunks
+
+
+def test_fac2_beats_gss_on_frontloaded():
+    """Claim (Sec. 3.1): 'If more time-consuming loop iterations are at
+    the beginning of the loop, FAC2 is expected to better balance their
+    execution than GSS.'"""
+    w = frontloaded_like(n=50_000)
+    gss = simulate("gss", w, p=P)[0].record
+    fac2 = simulate("fac2", w, p=P)[0].record
+    assert fac2.t_par < gss.t_par
+    assert fac2.percent_imbalance < gss.percent_imbalance
+
+
+def test_chunk_parameter_rescues_ss(sphynx):
+    """Claim (Sec. 4.3 / Fig. 10): a proper chunk parameter reduces SS's
+    overhead + locality loss and lets it reach/beat other techniques; an
+    overly large one reintroduces load imbalance (the Fig. 10 U-shape)."""
+    kw = dict(p=P, chunk_cold_cost=5e-6)  # per-chunk cache warm-up
+    t1 = simulate("ss", sphynx, chunk_param=1, **kw)[0].record
+    tgood = simulate("ss", sphynx, chunk_param=97, **kw)[0].record
+    thuge = simulate("ss", sphynx, chunk_param=sphynx.n // (2 * P), **kw)[0].record
+    assert tgood.t_par < t1.t_par  # overhead/locality reduction dominates
+    assert tgood.n_chunks < t1.n_chunks / 50
+    assert thuge.percent_imbalance > tgood.percent_imbalance
+    assert thuge.t_par > tgood.t_par  # U-shape right edge
+
+
+def test_adaptive_wins_under_system_variation(sphynx):
+    """Claim (Sec. 3.1/4.2): adaptive techniques adapt to slower/faster
+    processing units across time-steps; non-adaptive weighted ones can't."""
+    speeds = np.ones(P)
+    speeds[:4] = 1.8  # 4 slow cores (heterogeneous node)
+    ts = 4
+    awf = simulate("awf_b", sphynx, p=P, speeds=speeds, timesteps=ts)
+    af = simulate("af", sphynx, p=P, speeds=speeds, timesteps=ts)
+    static = simulate("static", sphynx, p=P, speeds=speeds, timesteps=ts)
+    # adaptives converge to balanced; static stays imbalanced
+    assert awf[-1].record.percent_imbalance < 5.0
+    assert af[-1].record.t_par < static[-1].record.t_par * 0.8
+    # AF improves (or stays) from first to last timestep
+    assert af[-1].record.t_par <= af[0].record.t_par * 1.02
+
+
+def test_best_combination_varies_across_dist_loops():
+    """Claim (Fig. 5): the best technique varies greatly between loops;
+    the Best combination includes LB4OMP techniques."""
+    rec = LoopRecorder()
+    for loop in ("L1", "L3", "L4"):
+        w = dist_loop(loop)
+        for t in ("static", "gss", "ss", "fac2", "tap", "fsc", "af", "awf_b"):
+            simulate(t, w, p=12, recorder=rec, profile=NOISY_PROFILE)
+    best = best_combination(rec.summary())
+    assert len(best) == 3
+    winners = {v["technique"] for v in best.values()}
+    # best-per-loop must not be a single global winner across all loops
+    # (allow rare tie collapse to 2)
+    assert len(winners) >= 2
+
+
+def test_dist_l0_constant_favors_low_overhead():
+    """On the constant DIST loop, static/fsc-style low-overhead scheduling
+    is at least as good as SS (no imbalance to fix)."""
+    w = dist_loop("L0")
+    static = simulate("static", w, p=12)[0].record
+    ss = simulate("ss", w, p=12)[0].record
+    assert static.t_par <= ss.t_par * 1.01
+
+
+def test_recorder_and_metrics_roundtrip(tmp_path, sphynx):
+    rec = LoopRecorder(print_chunks=True)
+    simulate("fac2", sphynx, p=P, recorder=rec, record_chunks=True)
+    path = tmp_path / "loops.json"
+    rec.save(str(path))
+    data = LoopRecorder.load(str(path))
+    assert data[0]["technique"] == "fac2"
+    assert data[0]["n_chunks"] == len(data[0]["chunks"])
+    assert 0 <= data[0]["percent_imbalance"] <= 100
+
+
+def test_timestepping_records_per_instance(sphynx):
+    rec = LoopRecorder()
+    simulate("awf", sphynx, p=P, timesteps=3, recorder=rec)
+    assert [r.instance for r in rec.records] == [0, 1, 2]
+
+
+def test_perturbation_hits_nonadaptive_harder(sphynx):
+    """System variation *during* execution (paper Sec. 4.3): adaptive
+    chunk-level techniques re-balance; a frozen WF2-style weighting that
+    guessed wrong cannot."""
+    wrong_w = np.ones(P)
+    wrong_w[:10] = 2.0  # weights assume the wrong half is fast
+
+    def perturb(ts, wkr):
+        return 2.0 if wkr >= 10 else 1.0  # actually the other half is slow
+
+    wf2 = simulate("wf2", sphynx, p=P, weights=wrong_w, perturb=perturb,
+                   timesteps=2)[-1].record
+    awfc = simulate("awf_c", sphynx, p=P, perturb=perturb, timesteps=2)[-1].record
+    assert awfc.t_par < wf2.t_par
