@@ -66,10 +66,12 @@ def serving() -> list[dict]:
                     prompt_len=int(rng.lognormal(6, 1)),
                     max_new_tokens=int(rng.lognormal(4.5, 0.8)))
             for i in range(400)]
+    from repro.core import ScheduleSpec
+
     rows = []
     for speed_name, speed in (("homogeneous", np.ones(8)),
                               ("one_slow_3x", np.array([3.] + [1.] * 7))):
-        for t in ("static", "ss", "gss", "fac2", "af"):
+        for t in map(ScheduleSpec.parse, ("static", "ss", "gss", "fac2", "af")):
             r = simulate_serving(reqs, num_workers=8, technique=t,
                                  worker_speed=speed)
             rows.append(dict(name=f"serving/{speed_name}/{t}",
@@ -133,7 +135,7 @@ def auto_select() -> list[dict]:
     w = gromacs_like(n=50_000)
     sel, hist = auto_simulate(w, p=20, timesteps=30, profile=NOISY_PROFILE)
     rows.append(dict(name="auto_select/fine_regular", us_per_call=0.0,
-                     chosen=sel.best,
+                     chosen=str(sel.best),
                      regret_last10=round(float(
                          np.mean([h["t_par"] for h in hist[-10:]])
                          / min(s["mean_t_par"]
@@ -146,7 +148,7 @@ def auto_select() -> list[dict]:
     sel2, hist2 = auto_simulate(w2, p=20, timesteps=30, speeds=speeds)
     static_t = simulate("static", w2, p=20, speeds=speeds)[0].record.t_par
     rows.append(dict(name="auto_select/hetero_irregular", us_per_call=0.0,
-                     chosen=sel2.best,
+                     chosen=str(sel2.best),
                      vs_static=round(float(
                          np.mean([h["t_par"] for h in hist2[-10:]])
                          / static_t), 4)))

@@ -17,6 +17,7 @@ import numpy as np
 from repro.core import (
     NOISY_PROFILE,
     LoopRecorder,
+    ScheduleSpec,
     best_combination,
     dist_loop,
     gromacs_like,
@@ -27,9 +28,12 @@ from repro.core import (
 )
 
 P = 20  # miniHPC-Broadwell
-TECHS = ["static", "ss", "gss", "tss", "fsc", "fac", "mfac", "fac2", "wf2",
-         "tap", "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af",
-         "maf"]
+
+# The campaign portfolio as ScheduleSpecs (validated against the registry
+# at import — a typo'd technique fails here, not mid-campaign).
+TECHS = tuple(ScheduleSpec.parse(t) for t in (
+    "static", "ss", "gss", "tss", "fsc", "fac", "mfac", "fac2", "wf2",
+    "tap", "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf"))
 
 
 def fig2_fig3(n: int = 200_000) -> list[dict]:
@@ -37,16 +41,16 @@ def fig2_fig3(n: int = 200_000) -> list[dict]:
     w = sphynx_like(n=n)
     rows = []
     for t in TECHS:
-        if t in ("static", "ss"):
+        if t.technique in ("static", "ss"):
             continue  # constant lines, not plotted in the paper either
-        r = simulate(t, w, p=P, chunk_param=97, record_chunks=True)[0].record
+        r = simulate(t.with_chunk_param(97), w, p=P,
+                     record_chunks=True)[0].record
         sizes = [c.size for c in r.chunks]
         rows.append(dict(
             name=f"fig2_3/{t}", us_per_call=r.t_par * 1e6,
             n_chunks=r.n_chunks, first=sizes[0], last=sizes[-1],
             max=max(sizes), min=min(sizes),
-            adaptive=t in ("bold", "awf", "awf_b", "awf_c", "awf_d",
-                           "awf_e", "af", "maf"),
+            adaptive=t.meta.adaptive,
             decreasing=all(a >= b for a, b in zip(sizes, sizes[1:])),
         ))
     return rows
@@ -104,7 +108,7 @@ def fig7(n: int = 200_000) -> list[dict]:
     for t in TECHS:
         r = simulate(t, w, p=P, numa_penalty=0.6, chunk_cold_cost=2e-7,
                      profile=NOISY_PROFILE)[0].record
-        if t == "static":
+        if t.technique == "static":
             base = r.t_par
         rows.append(dict(
             name=f"fig7/{t}", us_per_call=r.t_par * 1e6,
@@ -120,8 +124,9 @@ def fig8(n: int = 200_000) -> list[dict]:
     for kernel in ("copy", "scale", "add", "triad"):
         w = stream_loop(kernel, n=n)
         total_bytes = w.meta["bytes_per_iter"] * n
-        for t in ("static", "ss", "gss", "fac", "mfac", "fac2", "awf_b",
-                  "af", "maf"):
+        for t in map(ScheduleSpec.parse,
+                     ("static", "ss", "gss", "fac", "mfac", "fac2", "awf_b",
+                      "af", "maf")):
             r = simulate(t, w, p=P, numa_penalty=0.8, chunk_cold_cost=2e-7,
                          profile=NOISY_PROFILE)[0].record
             bw = total_bytes / r.t_par / 1e6  # MB/s
@@ -140,10 +145,11 @@ def fig9_10(n: int = 200_000) -> list[dict]:
     while cp > 1:
         params.append(cp)
         cp //= 2
-    for t in ("ss", "gss", "fac2", "fsc", "awf_b", "af", "maf"):
+    for t in map(ScheduleSpec.parse,
+                 ("ss", "gss", "fac2", "fsc", "awf_b", "af", "maf")):
         best_cp, best_t = None, np.inf
         for cpv in params:
-            r = simulate(t, w, p=P, chunk_param=cpv,
+            r = simulate(t.with_chunk_param(cpv), w, p=P,
                          chunk_cold_cost=5e-6)[0].record
             rows.append(dict(name=f"fig9_10/{t}/cp={cpv}",
                              us_per_call=r.t_par * 1e6,
@@ -161,8 +167,9 @@ def fig11(n: int = 1_000_000) -> list[dict]:
     w = sphynx_like(n=n)
     rows = []
     for cp in (n // (64 * P), n // (16 * P)):
-        for t in ("gss", "fac2", "awf_b", "af", "maf", "tap"):
-            r = simulate(t, w, p=P, chunk_param=cp,
+        for t in map(ScheduleSpec.parse,
+                     ("gss", "fac2", "awf_b", "af", "maf", "tap")):
+            r = simulate(t.with_chunk_param(cp), w, p=P,
                          record_chunks=True)[0].record
             sizes = [c.size for c in r.chunks]
             at_threshold = sum(1 for s in sizes if s == cp)

@@ -1,8 +1,13 @@
 """Quickstart: the paper's DLS techniques in 60 seconds.
 
 Runs the shared-queue simulator on an irregular loop with every
-technique, prints the paper's metrics (T_par, c.o.v., p.i.), then shows
-the SPMD side: an in-graph (jit) chunk plan and an AWF weight update.
+registered technique, prints the paper's metrics (T_par, c.o.v., p.i.),
+then shows the SPMD side: an in-graph (jit) chunk plan and an AWF weight
+update.
+
+Technique selection goes through the unified ScheduleSpec interface —
+try ``LB_SCHEDULE=gss,64 PYTHONPATH=src python examples/quickstart.py``
+to see the env override (the repo's OMP_SCHEDULE) in action.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    TECHNIQUES, simulate, sphynx_like, LoopRecorder, best_combination,
+    TECHNIQUES, ScheduleSpec, resolve, simulate, sphynx_like, LoopRecorder,
+    best_combination,
 )
 from repro.core.jax_sched import plan_chunks, awf_update
 
@@ -26,6 +32,12 @@ def main():
         r = simulate(t, w, p=20, recorder=rec)[0].record
         print(f"{t:8s} {r.t_par:9.4f} {r.cov:8.4f} "
               f"{r.percent_imbalance:7.2f} {r.n_chunks:7d}")
+
+    # schedule(runtime): $LB_SCHEDULE picks the technique, like OMP_SCHEDULE
+    spec = resolve(None, default="fac2,64")
+    r = simulate(spec, w, p=20)[0].record
+    print(f"\nschedule(runtime) -> {spec}: T_par={r.t_par:.4f} "
+          f"({r.n_chunks} chunks)")
     best = best_combination(rec.summary())
     for loop, row in best.items():
         print(f"\nBest technique: {row['technique']} "

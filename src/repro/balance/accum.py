@@ -16,26 +16,39 @@ example counts for the data loader.
 from __future__ import annotations
 
 import dataclasses
+from typing import Union
 
 import numpy as np
 
 from ..core.jax_sched import balanced_assignment  # noqa: F401 (re-export)
-from ..core.techniques import make_technique
+from ..core.schedule import ScheduleSpec, resolve
 
 __all__ = ["AccumPlanner"]
 
 
 @dataclasses.dataclass
 class AccumPlanner:
-    """AWF-weighted split of the global batch across pods/workers."""
+    """AWF-weighted split of the global batch across pods/workers.
+
+    ``schedule`` selects the adaptive weighting technique from the registry
+    (any technique exposing per-worker ``weights``, i.e. the AWF family);
+    its ``adapt_every`` sets the re-planning cadence in steps.  Resolves
+    through the standard path, so ``LB_SCHEDULE`` can override it at launch.
+    """
 
     num_workers: int
     global_batch: int
     min_per_worker: int = 1
+    schedule: Union[ScheduleSpec, str] = "awf"
 
     def __post_init__(self):
-        self._awf = make_technique("awf", n=max(self.global_batch, 1),
+        self.spec = resolve(self.schedule, default="awf")
+        self._awf = self.spec.make(n=max(self.global_batch, 1),
                                    p=self.num_workers)
+        if not (self.spec.meta.adaptive and hasattr(self._awf, "weights")):
+            raise ValueError(
+                f"AccumPlanner needs a weighted adaptive technique (AWF "
+                f"family), got {self.spec.technique!r}")
         self._step = 0
         self.weights = np.ones(self.num_workers)
 
@@ -50,10 +63,14 @@ class AccumPlanner:
                 break
             self._awf.complete_chunk(
                 w, g, exec_time=float(t[w]) * g.size / max(shares[w], 1))
+        # instance rolls every step so telemetry keeps flowing (the AWF
+        # accumulators fold at the time-step boundary); the *shares* only
+        # refresh at the adapt_every cadence
         self._awf.end_instance()
         self._step += 1
         self._awf.begin_instance(self._step)
-        self.weights = self._awf.weights.copy()
+        if self._step % self.spec.adapt_every == 0:
+            self.weights = self._awf.weights.copy()
         return self.weights
 
     def shares(self) -> np.ndarray:

@@ -18,10 +18,11 @@ Two host-side mechanisms, both driven by `repro.core` chunk calculus:
 from __future__ import annotations
 
 import dataclasses
+from typing import Union
 
 import numpy as np
 
-from ..core.techniques import make_technique
+from ..core.schedule import ScheduleSpec, resolve
 
 __all__ = ["MoEBalancer", "plan_tiles"]
 
@@ -32,13 +33,25 @@ class MoEBalancer:
 
     call `update(load)` after each step with measured tokens-per-expert;
     read `bias` (numpy, (E,)) to feed params['router_bias'].
+
+    ``schedule`` names the adaptive technique whose weighting rule the
+    balancer applies (must be adaptive per the registry); its
+    ``adapt_every`` is the cadence — telemetry accumulates every step but
+    weights/bias refresh only at every k-th update (AWF's adaptation-point
+    generalized to the router).
     """
 
     num_experts: int
     bias_strength: float = 1e-2
     recency: bool = True
+    schedule: Union[ScheduleSpec, str] = "awf"
 
     def __post_init__(self):
+        self.spec = resolve(self.schedule, default="awf")
+        if not self.spec.meta.adaptive:
+            raise ValueError(
+                f"MoEBalancer needs an adaptive technique, got "
+                f"{self.spec.technique!r} (adaptive=False)")
         self._wap_num = np.zeros(self.num_experts)
         self._wap_den = np.zeros(self.num_experts)
         self._k = 0
@@ -58,6 +71,8 @@ class MoEBalancer:
         kw = float(self._k) if self.recency else 1.0
         self._wap_num += kw * pi
         self._wap_den += kw
+        if self._k % self.spec.adapt_every:
+            return self.bias  # between adaptation points: accumulate only
         wap = np.maximum(self._wap_num / self._wap_den, 1e-9)
         inv = 1.0 / wap
         self.weights = self.num_experts * inv / inv.sum()
@@ -69,7 +84,7 @@ class MoEBalancer:
 
 
 def plan_tiles(expert_rows: np.ndarray, block_rows: int, p: int = 8,
-               technique: str = "fac2") -> np.ndarray:
+               technique: Union[ScheduleSpec, str] = "fac2") -> np.ndarray:
     """Order expert row-tiles so a P-way sequential split balances work.
 
     expert_rows: (E,) number of *live* rows per expert (ragged loads).
@@ -94,7 +109,7 @@ def plan_tiles(expert_rows: np.ndarray, block_rows: int, p: int = 8,
                    key=lambda t: (-expert_rows[live[t][0]], live[t][1]))
     n = len(order)
     if n > 1:
-        tech = make_technique(technique, n=n, p=p)
+        tech = resolve(technique).make(n=n, p=p)
         sched: list[int] = []
         pos = 0
         while True:

@@ -3,6 +3,17 @@ self-scheduling portfolio, measurement features, shared-queue simulator,
 and the SPMD/TPU-native planners built on the same chunk calculus.
 """
 
+from .schedule import (  # noqa: F401
+    LB_SCHEDULE_ENV,
+    REGISTRY,
+    GraphForm,
+    ScheduleSpec,
+    TechniqueRegistry,
+    TechniqueSpec,
+    bind_graph_form,
+    register_technique,
+    resolve,
+)
 from .techniques import (  # noqa: F401
     TECHNIQUES,
     ADAPTIVE_TECHNIQUES,

@@ -23,10 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from .schedule import ScheduleSpec, resolve
 from .simulator import OverheadModel, ProfileModel, EXACT_PROFILE, simulate
 from .workloads import Workload
 
@@ -37,26 +38,44 @@ DEFAULT_CANDIDATES = ("static", "gss", "fac2", "awf_b", "af", "maf", "ss")
 
 @dataclasses.dataclass
 class AutoSelector:
-    """Bandit over the technique portfolio (one loop's selector)."""
+    """Bandit over the technique portfolio (one loop's selector).
 
-    candidates: Sequence[str] = DEFAULT_CANDIDATES
+    Arms are :class:`ScheduleSpec`s — candidates may be given as specs or
+    OMP_SCHEDULE-style strings and are validated against the registry at
+    construction, so two chunk-param variants of the same technique
+    (``"fac2,64"`` vs ``"fac2,512"``) are distinct arms, and user-registered
+    plugin techniques are selectable with zero extra wiring.
+    """
+
+    candidates: Sequence[Union[str, ScheduleSpec]] = DEFAULT_CANDIDATES
     policy: str = "ucb"          # 'ucb' | 'explore_commit'
     explore_steps: int = 1       # per-candidate exploration budget
     ucb_c: float = 0.5           # exploration strength (relative times)
 
     def __post_init__(self):
+        self.candidates = tuple(resolve(c) for c in self.candidates)
+        self._keys = tuple(str(c) for c in self.candidates)
+        if len(set(self._keys)) != len(self._keys):
+            raise ValueError(f"duplicate candidates: {self._keys}")
         k = len(self.candidates)
         self._n = np.zeros(k, dtype=np.int64)
         self._mean = np.zeros(k)
         self._t = 0
         self._committed: Optional[int] = None
 
+    def _index_of(self, technique: Union[str, ScheduleSpec]) -> int:
+        key = str(resolve(technique))
+        return self._keys.index(key)
+
     # -- bandit api -----------------------------------------------------------
-    def choose(self) -> str:
+    def choose(self) -> ScheduleSpec:
         if self.policy == "explore_commit":
             for i in range(len(self.candidates)):
                 if self._n[i] < self.explore_steps:
                     return self.candidates[i]
+            # commit exactly once when exploration drains; the cached argmin
+            # stays valid until a candidate's stats change (record()
+            # invalidates) instead of being recomputed every step
             if self._committed is None:
                 self._committed = int(np.argmin(self._mean))
             return self.candidates[self._committed]
@@ -70,17 +89,21 @@ class AutoSelector:
             np.log(max(self._t, 2)) / np.maximum(self._n, 1))
         return self.candidates[int(np.argmax(reward + bonus))]
 
-    def record(self, technique: str, t_par: float) -> None:
-        i = self.candidates.index(technique)
+    def record(self, technique: Union[str, ScheduleSpec],
+               t_par: float) -> None:
+        i = self._index_of(technique)
         self._n[i] += 1
         self._t += 1
+        old = self._mean[i]
         self._mean[i] += (t_par - self._mean[i]) / self._n[i]
-        if self.policy == "explore_commit":
-            self._committed = None if (self._n < self.explore_steps).any() \
-                else self._committed
+        if (self.policy == "explore_commit" and self._committed is not None
+                and self._mean[i] != old and i != self._committed):
+            # a non-committed arm's stats changed (late telemetry / manual
+            # feed): the cached argmin may be stale, recompute lazily
+            self._committed = None
 
     @property
-    def best(self) -> str:
+    def best(self) -> ScheduleSpec:
         seen = self._n > 0
         if not seen.any():
             return self.candidates[0]
@@ -88,8 +111,8 @@ class AutoSelector:
         return self.candidates[int(np.argmin(means))]
 
     def summary(self) -> dict:
-        return {c: dict(steps=int(n), mean_t_par=float(m))
-                for c, n, m in zip(self.candidates, self._n, self._mean)}
+        return {k: dict(steps=int(n), mean_t_par=float(m))
+                for k, n, m in zip(self._keys, self._n, self._mean)}
 
 
 def auto_simulate(
@@ -114,11 +137,11 @@ def auto_simulate(
     sel = selector or AutoSelector()
     history: list[dict] = []
     for ts in range(timesteps):
-        tech = sel.choose()
-        rec = simulate(tech, workload, p=p, chunk_param=chunk_param,
+        spec = sel.choose()
+        rec = simulate(spec, workload, p=p, chunk_param=chunk_param,
                        speeds=speeds, perturb=perturb, profile=profile,
                        overhead=overhead, seed=seed + ts)[0].record
-        sel.record(tech, rec.t_par)
-        history.append(dict(step=ts, technique=tech, t_par=rec.t_par,
+        sel.record(spec, rec.t_par)
+        history.append(dict(step=ts, technique=str(spec), t_par=rec.t_par,
                             pi=rec.percent_imbalance))
     return sel, history

@@ -25,15 +25,19 @@ property-tested in tests/test_jax_sched.py.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .schedule import REGISTRY, ScheduleSpec, bind_graph_form, resolve
+
 __all__ = [
+    "PlanContext",
     "plan_chunks",
     "max_chunks_bound",
     "awf_update",
@@ -45,15 +49,29 @@ __all__ = [
 ]
 
 
-def max_chunks_bound(technique: str, n: int, p: int, chunk_param: int = 1) -> int:
-    """Static upper bound on the number of chunks (for padding)."""
-    cp = max(1, chunk_param)
-    t = technique.lower()
+def max_chunks_bound(technique: str | ScheduleSpec, n: int, p: int,
+                     chunk_param: Optional[int] = None) -> int:
+    """Static upper bound on the number of chunks (for padding).
+
+    An explicit ``chunk_param`` overrides the spec's; with a bare name
+    and no chunk_param, 1 (the portfolio default) is assumed.
+    """
+    if isinstance(technique, ScheduleSpec):
+        t = technique.technique
+        cp = chunk_param if chunk_param is not None else technique.chunk_param
+    else:
+        t = technique.lower().replace("-", "_")
+        cp = 1 if chunk_param is None else chunk_param
+    cp = max(1, cp)
     if t == "static":
         return p if cp <= 1 else math.ceil(n / cp)
     if t in ("ss", "fsc"):
         # fsc degenerates to fixed chunks >= cp; worst case cp itself
         return math.ceil(n / cp)
+    if t in REGISTRY:
+        gf = REGISTRY[t].graph
+        if gf is not None and gf.max_chunks is not None:
+            return int(gf.max_chunks(n, p, cp))
     # decreasing-chunk techniques: chunk >= max(cp, 1) each round; the
     # geometric families need ~P*log2(N/(P*cp)) + P rounds; be generous.
     geo = (p + 1) * (int(math.log2(max(n, 2))) + 2)
@@ -101,11 +119,136 @@ class _PlanCarry(NamedTuple):
     starts: jnp.ndarray
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """Everything a registered graph form may need to compute chunks.
+
+    Passed to ``GraphForm.builder(ctx)`` and
+    ``GraphForm.next_size(ctx, rem_total, rem_batch, i)`` — plugin
+    techniques binding a graph form via
+    :func:`repro.core.schedule.bind_graph_form` receive the same context.
+    """
+
+    n: int
+    p: int
+    cp: int                 # chunk_param
+    mc: int                 # max chunks (padding bound)
+    mu: float = 1.0
+    sigma: float = 0.0
+    h: float = 1e-6
+    alpha: float = 1.3
+    cov: float = 0.0        # sigma / mu
+    v: float = 0.0          # alpha * cov (TAP)
+    w: Any = None           # (P,) normalized worker weights (wf2)
+    max_chunks: Optional[int] = None  # caller's explicit padding request
+
+
+def _prefix_plan(sizes: jnp.ndarray, n: int):
+    """(sizes,) -> clipped (sizes, starts, count) triplet."""
+    sizes = _clip_to_n(sizes, n)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+    count = jnp.sum((sizes > 0).astype(jnp.int32))
+    return sizes, starts, count
+
+
+# -- direct array builders ---------------------------------------------------
+
+
+def _plan_static(ctx: PlanContext):
+    if ctx.cp > 1:
+        sizes_np = np.full(ctx.mc, ctx.cp, np.int32)
+    else:
+        base, rem = divmod(ctx.n, ctx.p)
+        sizes_np = np.array(
+            [base + (1 if i < rem else 0) for i in range(ctx.p)]
+            + [0] * (ctx.mc - ctx.p), np.int32)
+    return _prefix_plan(jnp.asarray(sizes_np), ctx.n)
+
+
+def _plan_ss(ctx: PlanContext):
+    full, tail = divmod(ctx.n, ctx.cp)
+    sizes_np = np.zeros(ctx.mc, np.int32)
+    sizes_np[:full] = ctx.cp
+    if tail:
+        sizes_np[full] = tail
+    sizes = jnp.asarray(sizes_np)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+    return sizes, starts, jnp.asarray(full + (1 if tail else 0), jnp.int32)
+
+
+def _plan_fsc(ctx: PlanContext):
+    logp = math.log(max(ctx.p, 2))
+    if ctx.sigma <= 0:
+        c = max(1, math.ceil(ctx.n / ctx.p))
+    else:
+        c = max(1, math.ceil(((math.sqrt(2.0) * ctx.n * ctx.h)
+                              / (ctx.sigma * ctx.p * math.sqrt(logp)))
+                             ** (2.0 / 3.0)))
+    c = max(c, ctx.cp)
+    return plan_chunks("ss", ctx.n, ctx.p, chunk_param=c,
+                       max_chunks=ctx.max_chunks or math.ceil(ctx.n / c))
+
+
+def _plan_tss(ctx: PlanContext):
+    first = max(1, math.ceil(ctx.n / (2 * ctx.p)))
+    last = min(max(1, ctx.cp), first)
+    steps = max(1, math.ceil(2 * ctx.n / (first + last)))
+    delta = (first - last) / (steps - 1) if steps > 1 else 0.0
+    idx = jnp.arange(ctx.mc, dtype=jnp.float32)
+    raw = jnp.maximum(jnp.ceil(first - idx * delta).astype(jnp.int32), last)
+    return _prefix_plan(raw, ctx.n)
+
+
+# -- per-request next-size forms (consumed by the generic while_loop) --------
+
+
+def _next_gss(ctx, rem_total, rem_batch, i):
+    del rem_batch, i
+    return _gss_next(jnp.maximum(rem_total, 1.0), ctx.p, ctx.cp)
+
+
+def _next_tap(ctx, rem_total, rem_batch, i):
+    del rem_batch, i
+    return _tap_next(jnp.maximum(rem_total, 1.0), ctx.p, ctx.cp, ctx.v)
+
+
+def _next_fac(ctx, rem_total, rem_batch, i):
+    del rem_total, i
+    return _fac_batch_chunk(jnp.maximum(rem_batch, 1.0), ctx.p, ctx.cp, ctx.cov)
+
+
+def _next_fac2(ctx, rem_total, rem_batch, i):
+    del rem_total, i
+    return _fac2_next(jnp.maximum(rem_batch, 1.0), ctx.p, ctx.cp, None)
+
+
+def _next_wf2(ctx, rem_total, rem_batch, i):
+    base = _fac2_next(jnp.maximum(rem_batch, 1.0), ctx.p, ctx.cp, None)
+    wkr = i % ctx.p
+    return jnp.maximum(jnp.ceil(ctx.w[wkr] * base).astype(jnp.int32), ctx.cp)
+
+
+# jax_sched's dispatch table IS the registry: each in-graph closed form is
+# bound to its technique entry, next to the host reference class.
+bind_graph_form("static", builder=_plan_static)
+bind_graph_form("ss", builder=_plan_ss)
+bind_graph_form("fsc", builder=_plan_fsc)
+bind_graph_form("tss", builder=_plan_tss)
+bind_graph_form("gss", next_size=_next_gss)
+bind_graph_form("tap", next_size=_next_tap)
+bind_graph_form("fac", next_size=_next_fac, batched=True)
+bind_graph_form("mfac", next_size=_next_fac, batched=True)
+bind_graph_form("fac2", next_size=_next_fac2, batched=True)
+bind_graph_form("wf2", next_size=_next_wf2, batched=True)
+
+
 def plan_chunks(
-    technique: str,
+    technique: str | ScheduleSpec,
     n: int,
     p: int,
-    chunk_param: int = 1,
+    chunk_param: Optional[int] = None,
     *,
     mu: float = 1.0,
     sigma: float = 0.0,
@@ -119,87 +262,38 @@ def plan_chunks(
     Returns (sizes[int32, max_chunks], starts[int32, max_chunks],
     count[int32]).  Entries past ``count`` are zero.  For weighted
     techniques (wf2) the i-th chunk belongs to worker i % p.
+
+    Dispatch is registry-driven: any technique whose entry carries a
+    :class:`~repro.core.schedule.GraphForm` (including user-registered
+    plugins) is plannable here; techniques without one raise ``KeyError``.
     """
-    t = technique.lower().replace("-", "_")
-    cp = max(1, int(chunk_param))
+    spec = resolve(technique, chunk_param=chunk_param)
+    t, cp = spec.technique, spec.chunk_param
+    graph = REGISTRY[t].graph
+    if graph is None:
+        raise KeyError(
+            f"plan_chunks: unsupported technique {t!r}; in-graph forms exist "
+            f"for {sorted(REGISTRY.graph_names())} (bind one with "
+            f"repro.core.schedule.bind_graph_form)")
+
     mc = int(max_chunks or max_chunks_bound(t, n, p, cp))
     cov = 0.0 if mu <= 0 else sigma / mu
-    v = alpha * cov
-
-    if t == "static":
-        if cp > 1:
-            sizes_np = np.full(mc, cp, np.int32)
-        else:
-            base, rem = divmod(n, p)
-            sizes_np = np.array([base + (1 if i < rem else 0) for i in range(p)]
-                                + [0] * (mc - p), np.int32)
-        sizes = jnp.asarray(sizes_np)
-        sizes = _clip_to_n(sizes, n)
-        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
-        count = jnp.sum((sizes > 0).astype(jnp.int32))
-        return sizes, starts, count
-
-    if t == "ss":
-        full, tail = divmod(n, cp)
-        sizes_np = np.zeros(mc, np.int32)
-        sizes_np[:full] = cp
-        if tail:
-            sizes_np[full] = tail
-        sizes = jnp.asarray(sizes_np)
-        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
-        return sizes, starts, jnp.asarray(full + (1 if tail else 0), jnp.int32)
-
-    if t == "fsc":
-        logp = math.log(max(p, 2))
-        if sigma <= 0:
-            c = max(1, math.ceil(n / p))
-        else:
-            c = max(1, math.ceil(((math.sqrt(2.0) * n * h)
-                                  / (sigma * p * math.sqrt(logp))) ** (2.0 / 3.0)))
-        c = max(c, cp)
-        return plan_chunks("ss", n, p, chunk_param=c,
-                           max_chunks=max_chunks or math.ceil(n / c))
-
-    if t == "tss":
-        first = max(1, math.ceil(n / (2 * p)))
-        last = min(max(1, cp), first)
-        steps = max(1, math.ceil(2 * n / (first + last)))
-        delta = (first - last) / (steps - 1) if steps > 1 else 0.0
-        idx = jnp.arange(mc, dtype=jnp.float32)
-        raw = jnp.maximum(jnp.ceil(first - idx * delta).astype(jnp.int32), last)
-        sizes = _clip_to_n(raw, n)
-        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                                  jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
-        count = jnp.sum((sizes > 0).astype(jnp.int32))
-        return sizes, starts, count
-
     if weights is None:
         w = jnp.ones((p,), jnp.float32)
     else:
         w = jnp.asarray(weights, jnp.float32)
         w = w * (p / jnp.sum(w))
+    ctx = PlanContext(n=n, p=p, cp=cp, mc=mc, mu=mu, sigma=sigma, h=h,
+                      alpha=alpha, cov=cov, v=alpha * cov, w=w,
+                      max_chunks=max_chunks)
 
-    batched = t in ("fac", "mfac", "fac2", "wf2")
+    if graph.builder is not None:
+        return graph.builder(ctx)
 
     def next_size(carry: _PlanCarry) -> jnp.ndarray:
         rem_total = jnp.maximum(n - carry.scheduled, 0).astype(jnp.float32)
         rem_batch = carry.batch_rem.astype(jnp.float32)
-        if t in ("fac", "mfac"):
-            c = _fac_batch_chunk(jnp.maximum(rem_batch, 1.0), p, cp, cov)
-        elif t == "fac2":
-            c = _fac2_next(jnp.maximum(rem_batch, 1.0), p, cp, None)
-        elif t == "wf2":
-            base = _fac2_next(jnp.maximum(rem_batch, 1.0), p, cp, None)
-            wkr = carry.i % p
-            c = jnp.maximum(jnp.ceil(w[wkr] * base).astype(jnp.int32), cp)
-        elif t == "gss":
-            c = _gss_next(jnp.maximum(rem_total, 1.0), p, cp)
-        elif t == "tap":
-            c = _tap_next(jnp.maximum(rem_total, 1.0), p, cp, v)
-        else:
-            raise KeyError(f"plan_chunks: unsupported technique {technique!r}")
+        c = graph.next_size(ctx, rem_total, rem_batch, carry.i)
         return jnp.minimum(jnp.maximum(c, 1), jnp.maximum(n - carry.scheduled, 0))
 
     def cond(carry: _PlanCarry):
@@ -213,7 +307,7 @@ def plan_chunks(
         in_batch = carry.in_batch + 1
         new_batch = in_batch >= p
         batch_rem = jnp.where(
-            new_batch if batched else False,
+            new_batch if graph.batched else False,
             jnp.maximum(n - scheduled, 0),
             carry.batch_rem,
         )

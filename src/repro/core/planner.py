@@ -16,7 +16,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .techniques import Technique, make_technique
+from .schedule import ScheduleSpec, resolve
+from .techniques import Technique
 
 __all__ = ["PlannedChunk", "Plan", "plan_schedule", "replan"]
 
@@ -40,6 +41,11 @@ class Plan:
     @property
     def n_chunks(self) -> int:
         return len(self.chunks)
+
+    @property
+    def spec(self) -> ScheduleSpec:
+        """The schedule this plan materializes, as a ScheduleSpec."""
+        return ScheduleSpec(self.technique, chunk_param=self.chunk_param)
 
     def per_worker(self) -> list[list[PlannedChunk]]:
         out: list[list[PlannedChunk]] = [[] for _ in range(self.p)]
@@ -69,27 +75,39 @@ class Plan:
 
 
 def plan_schedule(
-    technique: str | Technique,
+    technique: ScheduleSpec | str | Technique,
     n: int,
     p: int,
-    chunk_param: int = 1,
+    chunk_param: Optional[int] = None,
     *,
     round_robin: bool = True,
     **tech_kw,
 ) -> Plan:
     """Materialize a full schedule under deterministic request order.
 
-    Round-robin order is the canonical SPMD plan (worker i takes request
-    i, p+i, 2p+i, ...).  Adaptive techniques planned this way use only
-    their current weights/stats — callers feed telemetry between plans.
+    ``technique`` is a ScheduleSpec, an OMP_SCHEDULE-style string (or
+    ``"runtime"`` for $LB_SCHEDULE), or a prebuilt Technique.  Round-robin
+    order is the canonical SPMD plan (worker i takes request i, p+i,
+    2p+i, ...).  Adaptive techniques planned this way use only their
+    current weights/stats — callers feed telemetry between plans.
+
+    A spec with ``backend="graph"`` is materialized through the jit
+    planner (``jax_sched.plan_chunks``) instead of the host state
+    machines — identical chunks (property-tested), but the schedule is
+    produced by the same code path a jitted program would run.
     """
     if isinstance(technique, Technique):
         tech = technique
         name = tech.spec.name
         assert tech.n == n and tech.p == p
+        chunk_param = tech.chunk_param
     else:
-        name = technique
-        tech = make_technique(technique, n=n, p=p, chunk_param=chunk_param, **tech_kw)
+        spec = resolve(technique, chunk_param=chunk_param)
+        name = spec.technique
+        chunk_param = spec.chunk_param
+        if spec.backend == "graph":
+            return _plan_via_graph(spec, n, p, **tech_kw)
+        tech = spec.make(n=n, p=p, **tech_kw)
     chunks: list[PlannedChunk] = []
     wkr = 0
     while True:
@@ -101,6 +119,25 @@ def plan_schedule(
         wkr = (wkr + 1) % p
     plan = Plan(technique=name, n=n, p=p,
                 chunk_param=max(1, int(chunk_param)), chunks=tuple(chunks))
+    plan.validate()
+    return plan
+
+
+def _plan_via_graph(spec: ScheduleSpec, n: int, p: int, **plan_kw) -> Plan:
+    """backend="graph": materialize via the in-graph closed form."""
+    from .jax_sched import plan_chunks  # deferred: keeps jax optional here
+    from .schedule import REGISTRY
+
+    sizes, starts, count = plan_chunks(spec, n, p, **plan_kw)
+    count = int(count)
+    batched = REGISTRY[spec.technique].graph.batched
+    chunks = tuple(
+        PlannedChunk(worker=i % p, start=int(starts[i]), size=int(sizes[i]),
+                     batch=(i // p if batched else i))
+        for i in range(count)
+    )
+    plan = Plan(technique=spec.technique, n=n, p=p,
+                chunk_param=spec.chunk_param, chunks=chunks)
     plan.validate()
     return plan
 

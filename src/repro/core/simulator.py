@@ -34,7 +34,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .metrics import LoopInstanceRecord, LoopRecorder
-from .techniques import Technique, make_technique
+from .schedule import ScheduleSpec, resolve
+from .techniques import Technique
 from .workloads import Workload
 
 __all__ = ["OverheadModel", "ProfileModel", "EXACT_PROFILE", "NOISY_PROFILE",
@@ -124,29 +125,28 @@ def profile_workload(w: Workload,
     return profile.measure(w)
 
 
-def _technique_kwargs(name: str, w: Workload, p: int, ov: OverheadModel,
+def _technique_kwargs(spec: ScheduleSpec, w: Workload, p: int,
+                      ov: OverheadModel,
                       weights: Optional[Sequence[float]],
                       profile: ProfileModel) -> dict:
     """Feed profiling info to the techniques that require it."""
-    from .techniques import TECHNIQUES
-
-    cls = TECHNIQUES[name.lower().replace("-", "_")]
+    meta = spec.meta
     kw: dict = {}
-    if cls.spec.requires_profiling:
+    if meta.requires_profiling:
         mu, sigma = profile_workload(w, profile)
         kw["mu"], kw["sigma"] = mu, sigma
-        if name in ("fsc", "bold"):
-            kw["h"] = ov.per_request(cls.spec)
-    if name == "wf2" and weights is not None:
+        if spec.technique in ("fsc", "bold"):
+            kw["h"] = ov.per_request(meta)
+    if spec.technique == "wf2" and weights is not None:
         kw["weights"] = weights
     return kw
 
 
 def simulate(
-    technique: str | Technique,
+    technique: ScheduleSpec | str | Technique,
     workload: Workload,
     p: int,
-    chunk_param: int = 1,
+    chunk_param: Optional[int] = None,
     *,
     timesteps: int = 1,
     speeds: Optional[Sequence[float]] = None,
@@ -163,7 +163,10 @@ def simulate(
     """Simulate ``timesteps`` executions of the loop under one technique.
 
     Args:
-      technique: name (see core.techniques.TECHNIQUES) or a prebuilt object.
+      technique: a ScheduleSpec, an OMP_SCHEDULE-style string (``"fac2"``,
+        ``"fac2,64"``, ``"runtime"`` to read $LB_SCHEDULE), or a prebuilt
+        Technique object.  An explicit ``chunk_param`` argument overrides
+        the spec's.
       workload: iteration costs (seconds).
       p: number of workers (threads).
       chunk_param: the OpenMP chunk parameter (threshold / fixed size).
@@ -180,10 +183,13 @@ def simulate(
     if isinstance(technique, Technique):
         tech = technique
         tname = tech.spec.name
+        chunk_param = tech.chunk_param
     else:
-        tname = technique.lower().replace("-", "_")
-        kw = _technique_kwargs(tname, workload, p, overhead, weights, profile)
-        tech = make_technique(tname, n=n, p=p, chunk_param=chunk_param, **kw)
+        spec = resolve(technique, chunk_param=chunk_param)
+        tname = spec.technique
+        chunk_param = spec.chunk_param
+        kw = _technique_kwargs(spec, workload, p, overhead, weights, profile)
+        tech = spec.make(n=n, p=p, **kw)
 
     csum = np.concatenate([[0.0], np.cumsum(workload.costs)])
     speeds_arr = np.ones(p) if speeds is None else np.asarray(speeds, float)

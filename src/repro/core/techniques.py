@@ -43,14 +43,25 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .schedule import (
+    REGISTRY,
+    ScheduleSpec,
+    TechniqueSpec,
+    register_technique,
+    resolve,
+)
+
 __all__ = [
     "ChunkGrant",
     "Technique",
+    "TechniqueSpec",
     "make_technique",
+    "register_technique",
     "TECHNIQUES",
     "ADAPTIVE_TECHNIQUES",
     "NONADAPTIVE_TECHNIQUES",
     "PROFILING_TECHNIQUES",
+    "PAPER_LB4OMP_SET",
 ]
 
 
@@ -67,23 +78,6 @@ class ChunkGrant:
     size: int
     batch: int  # batch index (factoring-family); == request index otherwise
     worker: int
-
-
-@dataclasses.dataclass
-class TechniqueSpec:
-    """Static description used by the simulator's overhead model (Sec. 4.2).
-
-    ``o_cs`` is the *relative* cost of one chunk-size calculation and
-    ``sync`` the synchronization primitive the technique needs on a shared
-    queue.  These mirror the paper's three-factor overhead decomposition
-    (o_sr, o_cs, o_sync) and are calibrated in `core/simulator.py`.
-    """
-
-    name: str
-    adaptive: bool
-    requires_profiling: bool
-    sync: str  # "none" | "atomic" | "mutex"
-    o_cs: float  # relative chunk-calculation cost (1.0 == one FLOP-ish op)
 
 
 class Technique:
@@ -172,6 +166,7 @@ class Technique:
 # ---------------------------------------------------------------------------
 
 
+@register_technique
 class Static(Technique):
     """schedule(static[,c]) — one pre-planned round, zero synchronization."""
 
@@ -194,6 +189,7 @@ class Static(Technique):
         return request_idx
 
 
+@register_technique
 class SelfScheduling(Technique):
     """SS == schedule(dynamic,c): fixed chunk c (default 1) per request."""
 
@@ -206,6 +202,7 @@ class SelfScheduling(Technique):
         return self.chunk_param
 
 
+@register_technique
 class GSS(Technique):
     """Guided self-scheduling (Polychronopoulos & Kuck 1987): R/P."""
 
@@ -215,6 +212,7 @@ class GSS(Technique):
         return math.ceil(self.remaining / self.p)
 
 
+@register_technique
 class TSS(Technique):
     """Trapezoid self-scheduling (Tzen & Ni 1993): linear decrement.
 
@@ -248,6 +246,7 @@ class TSS(Technique):
 # ---------------------------------------------------------------------------
 
 
+@register_technique(paper_set=True)
 class FSC(Technique):
     """Fixed-size chunking (Kruskal & Weiss 1985).
 
@@ -320,6 +319,7 @@ class _FactoringBase(Technique):
                 )
 
 
+@register_technique(paper_set=True)
 class FAC(_FactoringBase):
     """Factoring (Flynn Hummel, Schonberg & Flynn 1992).
 
@@ -346,6 +346,7 @@ class FAC(_FactoringBase):
         return max(1, math.ceil(remaining / (x * self.p)))
 
 
+@register_technique(paper_set=True)
 class MFAC(FAC):
     """mFAC — LB4OMP's improvement of FAC (Sec. 3.1).
 
@@ -358,6 +359,7 @@ class MFAC(FAC):
     spec = TechniqueSpec("mfac", False, True, "atomic", 8.0)
 
 
+@register_technique(paper_set=True)
 class FAC2(_FactoringBase):
     """Practical factoring: every batch hands out half the remainder."""
 
@@ -367,6 +369,7 @@ class FAC2(_FactoringBase):
         return max(1, math.ceil(remaining / (2.0 * self.p)))
 
 
+@register_technique(paper_set=True)
 class WF2(_FactoringBase):
     """Weighted factoring (Flynn Hummel et al. 1996), FAC2-based practical
     variant: worker p receives w_p * (batch chunk).  Weights are fixed for
@@ -395,6 +398,7 @@ class WF2(_FactoringBase):
         return max(1, int(math.ceil(self.weights[worker] * self._batch_chunk)))
 
 
+@register_technique(paper_set=True)
 class TAP(Technique):
     """Tapering (Lucco 1992) — probabilistic generalization of GSS.
 
@@ -418,98 +422,12 @@ class TAP(Technique):
         return max(1, int(math.ceil(c)))
 
 
-class TFSS(Technique):
-    """Trapezoid factoring self-scheduling — beyond-paper extra that meets
-    the paper's selection criteria (simple chunk calculation).  Batches of P
-    requests share the mean of the TSS bounds for that batch."""
-
-    spec = TechniqueSpec("tfss", False, False, "atomic", 2.0)
-
-    def _init(self, **kw):
-        del kw
-        self._first = max(1, math.ceil(self.n / (2 * self.p)))
-        self._last = 1.0
-        self._steps = max(1, math.ceil(2 * self.n / (self._first + self._last)))
-        self._delta = (
-            (self._first - self._last) / (self._steps - 1) if self._steps > 1 else 0.0
-        )
-
-    def _batch_of(self, request_idx: int) -> int:
-        return request_idx // self.p
-
-    def _chunk_size(self, worker: int) -> int:
-        j = self.request_idx // self.p
-        lo = self._first - j * self.p * self._delta
-        hi = lo - (self.p - 1) * self._delta
-        return max(1, int(math.ceil((lo + hi) / 2.0)))
-
-
-class Rand(Technique):
-    """RAND — uniformly random chunk in [N/(100P), N/(2P)] (related-work
-    baseline from Ciorba et al. 2018; beyond-paper extra)."""
-
-    spec = TechniqueSpec("rand", False, False, "atomic", 2.0)
-
-    def _init(self, seed: int = 0, **kw):
-        del kw
-        self._rng = np.random.default_rng(seed)
-        self._lo = max(1, self.n // (100 * self.p))
-        self._hi = max(self._lo + 1, self.n // (2 * self.p))
-
-    def _chunk_size(self, worker: int) -> int:
-        return int(self._rng.integers(self._lo, self._hi))
-
-
-class FISS(Technique):
-    """Fixed-increase size chunking (beyond-paper extra; the increasing-
-    chunk family from the DLS literature).  Chunks grow linearly per
-    batch of P requests:
-
-        B      = max(2, ceil(log2(N / P)))        # number of stages
-        c_0    = N / ((2 + B) * P)                # first chunk
-        delta  = 2 * N * (1 - B / (2 + B)) / (P * B * (B - 1))
-        c_j    = c_0 + j * delta
-
-    Rationale (mirrors the paper's selection criteria): early small
-    chunks absorb startup imbalance; later large chunks amortize o_sr.
-    """
-
-    spec = TechniqueSpec("fiss", False, False, "atomic", 2.0)
-
-    def _init(self, **kw):
-        del kw
-        b = max(2, math.ceil(math.log2(max(self.n / max(self.p, 1), 2))))
-        self._b = b
-        self._c0 = max(1.0, self.n / ((2 + b) * self.p))
-        self._delta = (2.0 * self.n * (1.0 - b / (2.0 + b))
-                       / (self.p * b * (b - 1)))
-
-    def _batch_of(self, request_idx: int) -> int:
-        return request_idx // self.p
-
-    def _chunk_size(self, worker: int) -> int:
-        j = min(self.request_idx // self.p, self._b - 1)
-        return max(1, int(math.ceil(self._c0 + j * self._delta)))
-
-
-class VISS(FISS):
-    """Variable-increase size chunking: like FISS but the increment
-    halves every stage (c_j = c_{j-1} + c_0 / 2**j), converging to ~2*c_0
-    — gentler tail growth for irregular loops."""
-
-    spec = TechniqueSpec("viss", False, False, "atomic", 2.0)
-
-    def _chunk_size(self, worker: int) -> int:
-        j = min(self.request_idx // self.p, 30)
-        # c_j = c0 * (1 + sum_{i=1..j} 2^-i) = c0 * (2 - 2^-j)
-        return max(1, int(math.ceil(self._c0 * (2.0 - 2.0 ** (-j)))))
-
-
 # ---------------------------------------------------------------------------
 # Dynamic, adaptive (LB4OMP additions)
 # ---------------------------------------------------------------------------
 
 
+@register_technique(paper_set=True)
 class BOLD(Technique):
     """BOLD (Hagerup 1997) — overhead-aware, variance-aware factoring that
     starts *bolder* (larger early chunks) than FAC to cut scheduling rounds.
@@ -652,33 +570,39 @@ class _AWFBase(_FactoringBase):
         super()._on_begin_instance()
 
 
+@register_technique(paper_set=True)
 class AWF(_AWFBase):
     spec = TechniqueSpec("awf", True, False, "atomic", 6.0)
     cadence = "timestep"
 
 
+@register_technique(paper_set=True)
 class AWF_B(_AWFBase):
     spec = TechniqueSpec("awf_b", True, False, "atomic", 6.0)
     cadence = "batch"
 
 
+@register_technique(paper_set=True)
 class AWF_C(_AWFBase):
     spec = TechniqueSpec("awf_c", True, False, "atomic", 8.0)
     cadence = "chunk"
 
 
+@register_technique(paper_set=True)
 class AWF_D(_AWFBase):
     spec = TechniqueSpec("awf_d", True, False, "atomic", 8.0)
     cadence = "chunk"
     include_overhead = True
 
 
+@register_technique(paper_set=True)
 class AWF_E(_AWFBase):
     spec = TechniqueSpec("awf_e", True, False, "atomic", 6.0)
     cadence = "batch"
     include_overhead = True
 
 
+@register_technique(paper_set=True)
 class AF(Technique):
     """Adaptive factoring (Banicescu & Liu 2000).
 
@@ -746,6 +670,7 @@ class AF(Technique):
         self._m2[worker] += k * d * (per_iter - self._mean[worker])
 
 
+@register_technique(paper_set=True)
 class MAF(AF):
     """mAF — LB4OMP's improvement of AF (Sec. 3.1): per-chunk timings also
     include the scheduling overhead, so the estimator sees the *true* cost
@@ -756,55 +681,125 @@ class MAF(AF):
 
 
 # ---------------------------------------------------------------------------
-# Registry
+# Beyond-paper extras (same selection criteria, Sec. 2)
 # ---------------------------------------------------------------------------
 
-TECHNIQUES: dict[str, type[Technique]] = {
-    "static": Static,
-    "ss": SelfScheduling,
-    "gss": GSS,
-    "tss": TSS,
-    "fsc": FSC,
-    "fac": FAC,
-    "mfac": MFAC,
-    "fac2": FAC2,
-    "wf2": WF2,
-    "tap": TAP,
-    "bold": BOLD,
-    "awf": AWF,
-    "awf_b": AWF_B,
-    "awf_c": AWF_C,
-    "awf_d": AWF_D,
-    "awf_e": AWF_E,
-    "af": AF,
-    "maf": MAF,
-    # beyond-paper extras (same selection criteria, Sec. 2)
-    "tfss": TFSS,
-    "rand": Rand,
-    "fiss": FISS,
-    "viss": VISS,
-}
 
-ADAPTIVE_TECHNIQUES = tuple(
-    k for k, v in TECHNIQUES.items() if v.spec.adaptive
-)
-NONADAPTIVE_TECHNIQUES = tuple(
-    k for k, v in TECHNIQUES.items() if not v.spec.adaptive
-)
-PROFILING_TECHNIQUES = tuple(
-    k for k, v in TECHNIQUES.items() if v.spec.requires_profiling
-)
+@register_technique
+class TFSS(Technique):
+    """Trapezoid factoring self-scheduling — beyond-paper extra that meets
+    the paper's selection criteria (simple chunk calculation).  Batches of P
+    requests share the mean of the TSS bounds for that batch."""
 
-# The 14 techniques the paper counts as LB4OMP's additions.
-PAPER_LB4OMP_SET = (
-    "fsc", "fac", "fac2", "tap", "wf2", "mfac",
-    "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
-)
+    spec = TechniqueSpec("tfss", False, False, "atomic", 2.0)
+
+    def _init(self, **kw):
+        del kw
+        self._first = max(1, math.ceil(self.n / (2 * self.p)))
+        self._last = 1.0
+        self._steps = max(1, math.ceil(2 * self.n / (self._first + self._last)))
+        self._delta = (
+            (self._first - self._last) / (self._steps - 1) if self._steps > 1 else 0.0
+        )
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx // self.p
+
+    def _chunk_size(self, worker: int) -> int:
+        j = self.request_idx // self.p
+        lo = self._first - j * self.p * self._delta
+        hi = lo - (self.p - 1) * self._delta
+        return max(1, int(math.ceil((lo + hi) / 2.0)))
 
 
-def make_technique(name: str, n: int, p: int, chunk_param: int = 1, **kw) -> Technique:
-    """Factory: ``make_technique("fac2", n=10**6, p=20, chunk_param=97)``."""
-    key = name.lower().replace("-", "_")
-    if key not in TECHNIQUES:
-        raise KeyError(f"unknown technique {name!r}; known: {sorted(TECHNIQUES)}")
-    return TECHNIQUES[key](n=n, p=p, chunk_param=chunk_param, **kw)
+@register_technique
+class Rand(Technique):
+    """RAND — uniformly random chunk in [N/(100P), N/(2P)] (related-work
+    baseline from Ciorba et al. 2018; beyond-paper extra)."""
+
+    spec = TechniqueSpec("rand", False, False, "atomic", 2.0)
+
+    def _init(self, seed: int = 0, **kw):
+        del kw
+        self._rng = np.random.default_rng(seed)
+        self._lo = max(1, self.n // (100 * self.p))
+        self._hi = max(self._lo + 1, self.n // (2 * self.p))
+
+    def _chunk_size(self, worker: int) -> int:
+        return int(self._rng.integers(self._lo, self._hi))
+
+
+@register_technique
+class FISS(Technique):
+    """Fixed-increase size chunking (beyond-paper extra; the increasing-
+    chunk family from the DLS literature).  Chunks grow linearly per
+    batch of P requests:
+
+        B      = max(2, ceil(log2(N / P)))        # number of stages
+        c_0    = N / ((2 + B) * P)                # first chunk
+        delta  = 2 * N * (1 - B / (2 + B)) / (P * B * (B - 1))
+        c_j    = c_0 + j * delta
+
+    Rationale (mirrors the paper's selection criteria): early small
+    chunks absorb startup imbalance; later large chunks amortize o_sr.
+    """
+
+    spec = TechniqueSpec("fiss", False, False, "atomic", 2.0)
+
+    def _init(self, **kw):
+        del kw
+        b = max(2, math.ceil(math.log2(max(self.n / max(self.p, 1), 2))))
+        self._b = b
+        self._c0 = max(1.0, self.n / ((2 + b) * self.p))
+        self._delta = (2.0 * self.n * (1.0 - b / (2.0 + b))
+                       / (self.p * b * (b - 1)))
+
+    def _batch_of(self, request_idx: int) -> int:
+        return request_idx // self.p
+
+    def _chunk_size(self, worker: int) -> int:
+        j = min(self.request_idx // self.p, self._b - 1)
+        return max(1, int(math.ceil(self._c0 + j * self._delta)))
+
+
+@register_technique
+class VISS(FISS):
+    """Variable-increase size chunking: like FISS but the increment
+    halves every stage (c_j = c_{j-1} + c_0 / 2**j), converging to ~2*c_0
+    — gentler tail growth for irregular loops."""
+
+    spec = TechniqueSpec("viss", False, False, "atomic", 2.0)
+
+    def _chunk_size(self, worker: int) -> int:
+        j = min(self.request_idx // self.p, 30)
+        # c_j = c0 * (1 + sum_{i=1..j} 2^-i) = c0 * (2 - 2^-j)
+        return max(1, int(math.ceil(self._c0 * (2.0 - 2.0 ** (-j)))))
+
+
+
+
+# ---------------------------------------------------------------------------
+# Registry views — live projections of core.schedule.REGISTRY.  User-defined
+# techniques registered with @register_technique appear here automatically.
+# ---------------------------------------------------------------------------
+
+#: name -> host reference class (the historical dict, now a registry view)
+TECHNIQUES = REGISTRY.class_view()
+
+ADAPTIVE_TECHNIQUES = REGISTRY.names_view(lambda e: e.meta.adaptive)
+NONADAPTIVE_TECHNIQUES = REGISTRY.names_view(lambda e: not e.meta.adaptive)
+PROFILING_TECHNIQUES = REGISTRY.names_view(lambda e: e.meta.requires_profiling)
+
+#: The 14 techniques the paper counts as LB4OMP's additions.
+PAPER_LB4OMP_SET = REGISTRY.names_view(lambda e: e.paper_set)
+
+
+def make_technique(spec: str | ScheduleSpec, n: int, p: int,
+                   chunk_param: Optional[int] = None, **kw) -> Technique:
+    """Factory: ``make_technique("fac2", n=10**6, p=20, chunk_param=97)``.
+
+    Deprecation shim over :meth:`ScheduleSpec.make` — accepts a bare name,
+    an ``OMP_SCHEDULE``-style string (``"fac2,64"``), or a ``ScheduleSpec``.
+    An explicit ``chunk_param`` argument overrides the spec's.
+    """
+    return resolve(spec, chunk_param=chunk_param).make(n=n, p=p, **kw)

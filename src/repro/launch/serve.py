@@ -24,8 +24,9 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--technique", default="fac2",
-                    help="DLS admission technique (see repro.core)")
+    ap.add_argument("--technique", default=None,
+                    help="DLS admission ScheduleSpec, e.g. 'fac2,8' "
+                         "(default: $LB_SCHEDULE, else fac2)")
     ap.add_argument("--kv8", action="store_true",
                     help="int8-quantized KV cache")
     ap.add_argument("--full", action="store_true")
@@ -39,10 +40,13 @@ def main():
         import dataclasses
 
         cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
-    print(f"arch={cfg.name} slots={args.slots} technique={args.technique}")
+    from ..core.schedule import resolve
+
+    spec = resolve(args.technique, default="fac2")
+    print(f"arch={cfg.name} slots={args.slots} technique={spec}")
     params, _ = init_decoder(jax.random.key(args.seed), cfg)
     eng = DecodeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                       technique=args.technique)
+                       technique=spec)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         eng.submit(Request(

@@ -43,7 +43,7 @@ class EngineStats:
 
 class DecodeEngine:
     def __init__(self, cfg, params, slots: int = 4, max_len: int = 128,
-                 technique: str = "fac2", greedy: bool = True,
+                 technique="fac2", greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0):
         self.cfg = cfg
         self.params = params

@@ -23,11 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
-from ..core.techniques import make_technique
+from ..core.schedule import ScheduleSpec, resolve
 
 __all__ = ["Request", "RequestScheduler", "simulate_serving"]
 
@@ -47,13 +47,20 @@ class Request:
 
 @dataclasses.dataclass
 class RequestScheduler:
-    """DLS admission: workers pull chunks of the pending queue."""
+    """DLS admission: workers pull chunks of the pending queue.
+
+    ``technique`` accepts a ScheduleSpec or an OMP_SCHEDULE-style string
+    (``"runtime"`` / None reads $LB_SCHEDULE, default fac2); an explicit
+    ``chunk_param`` argument overrides the spec's.
+    """
 
     num_workers: int
-    technique: str = "fac2"
-    chunk_param: int = 1
+    technique: Union[ScheduleSpec, str, None] = "fac2"
+    chunk_param: Optional[int] = None
 
     def __post_init__(self):
+        self.spec = resolve(self.technique, default="fac2",
+                            chunk_param=self.chunk_param)
         self._pending: list[Request] = []
         self._tech = None
         self._assigned: dict[int, list[Request]] = {
@@ -68,9 +75,8 @@ class RequestScheduler:
             self._tech = None
             return []
         if self._tech is None or self._tech.remaining <= 0:
-            self._tech = make_technique(
-                self.technique, n=len(self._pending), p=self.num_workers,
-                chunk_param=self.chunk_param)
+            self._tech = self.spec.make(
+                n=len(self._pending), p=self.num_workers)
             self._cursor = 0
         grant = self._tech.next_chunk(worker)
         if grant is None:
@@ -88,7 +94,8 @@ class RequestScheduler:
 
 
 def simulate_serving(requests: list[Request], num_workers: int,
-                     technique: str = "fac2", chunk_param: int = 1,
+                     technique: Union[ScheduleSpec, str] = "fac2",
+                     chunk_param: Optional[int] = None,
                      worker_speed: Optional[np.ndarray] = None) -> dict:
     """Event-driven serving simulation: returns latency stats.
 

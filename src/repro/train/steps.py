@@ -9,17 +9,19 @@ decode step against a full cache.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from ..core.schedule import ScheduleSpec, resolve
 from ..models import decode_step, loss_fn
 from ..optim.adamw import AdamWState, OptimizerConfig, adamw_update
 
 
 def make_train_step(cfg, opt_cfg: OptimizerConfig,
-                    num_microbatches: int = 1):
+                    num_microbatches: int = 1,
+                    schedule: Union[ScheduleSpec, str, None] = None):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).  batch: {'tokens': (B, S), 'labels': (B, S)[, 'prefix_embed']}
 
@@ -27,7 +29,15 @@ def make_train_step(cfg, opt_cfg: OptimizerConfig,
     and gradients are accumulated under a lax.scan — the in-graph half of
     the DLS microbatch planner (the host half re-plans the split between
     steps from measured times; see balance/accum.py).
+
+    ``schedule`` is the OMP_SCHEDULE idiom for accumulation: a
+    ScheduleSpec/string whose chunk_param is the *microbatch size* in
+    examples (``"ss,8"`` == scan over 8-example microbatches; the scan
+    needs a fixed chunk, so the spec's chunk_param drives the split and
+    the batch size must be divisible by it).  Overrides
+    ``num_microbatches`` when given; resolves $LB_SCHEDULE via "runtime".
     """
+    spec = resolve(schedule) if schedule is not None else None
 
     def loss_of(params, tokens, labels, prefix):
         return loss_fn(params, cfg, tokens, labels, prefix)
@@ -35,6 +45,14 @@ def make_train_step(cfg, opt_cfg: OptimizerConfig,
     def train_step(params, opt_state: AdamWState, batch):
         tokens, labels = batch["tokens"], batch["labels"]
         prefix = batch.get("prefix_embed")
+        nonlocal num_microbatches
+        if spec is not None:
+            b = tokens.shape[0]
+            mb_size = min(spec.chunk_param, b)
+            assert b % mb_size == 0, (
+                f"batch {b} not divisible by microbatch size {mb_size} "
+                f"from schedule {spec}")
+            num_microbatches = b // mb_size
         if num_microbatches <= 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_of, has_aux=True)(params, tokens, labels, prefix)

@@ -42,6 +42,9 @@ class TrainerConfig:
     log_every: int = 10
     max_failures: int = 3
     num_worker_groups: int = 1  # pods for the AccumPlanner
+    # AWF-family ScheduleSpec/string for the straggler re-weighting
+    # ("runtime" or None reads $LB_SCHEDULE)
+    accum_schedule: object = "awf"
 
 
 class Trainer:
@@ -57,7 +60,8 @@ class Trainer:
         self.failure_hook = failure_hook  # test hook: raises to simulate
         self.planner = AccumPlanner(
             num_workers=max(train_cfg.num_worker_groups, 1),
-            global_batch=data_cfg.global_batch)
+            global_batch=data_cfg.global_batch,
+            schedule=train_cfg.accum_schedule)
         self._step_fn = jax.jit(make_train_step(
             model_cfg, opt_cfg, num_microbatches=train_cfg.num_microbatches),
             donate_argnums=(0, 1))

@@ -13,26 +13,42 @@ def test_selector_explores_all_candidates_first():
     seen = set()
     for _ in range(3):
         t = sel.choose()
-        seen.add(t)
+        seen.add(str(t))
         sel.record(t, 1.0)
     assert seen == {"static", "gss", "fac2"}
 
 
 def test_selector_commits_to_best():
-    sel = AutoSelector(candidates=("a", "b"), policy="explore_commit",
+    sel = AutoSelector(candidates=("gss", "fac2"), policy="explore_commit",
                        explore_steps=2)
-    times = {"a": 2.0, "b": 1.0}
+    times = {"gss": 2.0, "fac2": 1.0}
     for _ in range(10):
         t = sel.choose()
-        sel.record(t, times[t])
-    assert sel.best == "b"
-    assert sel.choose() == "b"
+        sel.record(t, times[str(t)])
+    assert str(sel.best) == "fac2"
+    assert str(sel.choose()) == "fac2"
+
+
+def test_selector_rejects_unknown_candidates():
+    with pytest.raises(KeyError):
+        AutoSelector(candidates=("gss", "not_a_technique"))
+
+
+def test_selector_chunk_param_variants_are_distinct_arms():
+    sel = AutoSelector(candidates=("fac2,64", "fac2,512"),
+                       policy="explore_commit", explore_steps=1)
+    times = {"fac2,64": 1.0, "fac2,512": 2.0}
+    for _ in range(4):
+        t = sel.choose()
+        sel.record(t, times[str(t)])
+    assert str(sel.best) == "fac2,64"
+    assert sel.best.chunk_param == 64
 
 
 def test_auto_picks_static_on_fine_regular_loop():
     w = gromacs_like(n=30_000)
     sel, hist = auto_simulate(w, p=20, timesteps=25, profile=NOISY_PROFILE)
-    assert sel.best == "static"
+    assert str(sel.best) == "static"
     # UCB keeps occasionally exploring near-ties (static vs gss differ by
     # ~3% here); what must hold: the pathological arm (ss: 5x slower) is
     # never re-pulled after its first sample
@@ -48,7 +64,7 @@ def test_auto_beats_static_under_heterogeneity():
     static_t = simulate("static", w, p=20, speeds=speeds)[0].record.t_par
     tail = np.mean([h["t_par"] for h in hist[-8:]])
     assert tail < 0.8 * static_t
-    assert sel.best != "static"
+    assert str(sel.best) != "static"
 
 
 def test_fiss_viss_increasing_and_valid():

@@ -3,7 +3,10 @@ for ANY technique / workload / worker count."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import TECHNIQUES, Workload, simulate
 from repro.core.simulator import OverheadModel

@@ -1,0 +1,222 @@
+"""Unified ScheduleSpec + technique-registry API (core/schedule.py)."""
+
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    ADAPTIVE_TECHNIQUES,
+    NONADAPTIVE_TECHNIQUES,
+    PAPER_LB4OMP_SET,
+    PROFILING_TECHNIQUES,
+    REGISTRY,
+    TECHNIQUES,
+    ScheduleSpec,
+    Technique,
+    TechniqueSpec,
+    make_technique,
+    plan_schedule,
+    register_technique,
+    resolve,
+    simulate,
+    sphynx_like,
+)
+
+# The portfolio as shipped by the seed (the old hand-maintained dict).
+SEED_TECHNIQUES = (
+    "static", "ss", "gss", "tss", "fsc", "fac", "mfac", "fac2", "wf2",
+    "tap", "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
+    "tfss", "rand", "fiss", "viss",
+)
+
+
+# -- ScheduleSpec.parse --------------------------------------------------------
+
+
+def test_parse_roundtrips():
+    s = ScheduleSpec.parse("fac2,64")
+    assert s.technique == "fac2" and s.chunk_param == 64
+    assert str(s) == "fac2,64"
+    assert ScheduleSpec.parse(str(s)) == s
+
+    bare = ScheduleSpec.parse("gss")
+    assert bare == ScheduleSpec("gss") and str(bare) == "gss"
+
+    full = ScheduleSpec.parse("awf_b,8,adapt=4,backend=host")
+    assert (full.chunk_param, full.adapt_every, full.backend) == (8, 4, "host")
+    assert ScheduleSpec.parse(str(full)) == full
+
+
+def test_parse_canonicalizes_names():
+    assert ScheduleSpec.parse("AWF-B").technique == "awf_b"
+    # OpenMP-standard aliases
+    assert ScheduleSpec.parse("dynamic,4") == ScheduleSpec("ss", 4)
+    assert ScheduleSpec.parse("guided").technique == "gss"
+
+
+def test_parse_bad_name_lists_valid_techniques():
+    with pytest.raises(KeyError) as ei:
+        ScheduleSpec.parse("no_such_technique")
+    msg = str(ei.value)
+    assert "no_such_technique" in msg
+    for known in ("fac2", "gss", "awf_b"):
+        assert known in msg
+
+
+def test_parse_bad_tokens():
+    with pytest.raises(ValueError):
+        ScheduleSpec.parse("fac2,64,what=1")
+    with pytest.raises(ValueError):
+        ScheduleSpec.parse("")
+    with pytest.raises(ValueError):
+        ScheduleSpec("fac2", backend="tpu")
+
+
+# -- env resolution (the OMP_SCHEDULE idiom) ----------------------------------
+
+
+def test_lb_schedule_env_override(monkeypatch):
+    monkeypatch.setenv("LB_SCHEDULE", "tss,32")
+    assert resolve("runtime") == ScheduleSpec("tss", 32)
+    assert resolve(None) == ScheduleSpec("tss", 32)
+    # an explicit spec wins over the env
+    assert resolve("fac2,8") == ScheduleSpec("fac2", 8)
+
+
+def test_lb_schedule_unset_falls_back(monkeypatch):
+    monkeypatch.delenv("LB_SCHEDULE", raising=False)
+    assert resolve(None, default="fac2") == ScheduleSpec("fac2")
+    with pytest.raises(ValueError):
+        resolve("runtime")  # no env, no default
+
+
+def test_env_flows_through_simulate(monkeypatch):
+    monkeypatch.setenv("LB_SCHEDULE", "gss")
+    w = sphynx_like(n=2_000)
+    rec = simulate("runtime", w, p=4)[0].record
+    assert rec.technique == "gss"
+
+
+# -- registry views ------------------------------------------------------------
+
+
+def test_registry_iteration_matches_seed_techniques():
+    assert tuple(TECHNIQUES)[: len(SEED_TECHNIQUES)] == SEED_TECHNIQUES
+    assert tuple(REGISTRY)[: len(SEED_TECHNIQUES)] == SEED_TECHNIQUES
+
+
+def test_registry_views_partition_portfolio():
+    adaptive = ("bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf")
+    assert tuple(a for a in ADAPTIVE_TECHNIQUES
+                 if a in SEED_TECHNIQUES) == adaptive
+    assert set(ADAPTIVE_TECHNIQUES) | set(NONADAPTIVE_TECHNIQUES) >= set(
+        SEED_TECHNIQUES)
+    assert not set(ADAPTIVE_TECHNIQUES) & set(NONADAPTIVE_TECHNIQUES)
+    assert set(PROFILING_TECHNIQUES) >= {"fsc", "fac", "mfac", "tap", "bold"}
+    assert set(PAPER_LB4OMP_SET) == {
+        "fsc", "fac", "fac2", "tap", "wf2", "mfac",
+        "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf"}
+
+
+def test_class_view_behaves_like_the_old_dict():
+    assert "fac" in TECHNIQUES
+    assert TECHNIQUES["fac"].spec.sync == "mutex"
+    assert sorted(TECHNIQUES) == sorted(set(TECHNIQUES))
+    t = TECHNIQUES["gss"](n=100, p=4)
+    assert t.next_chunk(0).size == 25
+
+
+def test_explicit_chunk_param_overrides_spec_even_to_one():
+    spec = ScheduleSpec.parse("fac2,64")
+    assert resolve(spec, chunk_param=1).chunk_param == 1
+    assert resolve(spec).chunk_param == 64
+    t = make_technique(spec, n=1000, p=4, chunk_param=1)
+    assert t.chunk_param == 1
+    w = sphynx_like(n=2_000)
+    rec = simulate(spec, w, p=4, chunk_param=1)[0].record
+    assert rec.chunk_param == 1
+
+
+def test_backend_graph_plans_via_jit_closed_form():
+    host = plan_schedule("fac2,64", n=10_000, p=8)
+    graph = plan_schedule(ScheduleSpec.parse("fac2,64,backend=graph"),
+                          n=10_000, p=8)
+    graph.validate()
+    assert [c.size for c in graph.chunks] == [c.size for c in host.chunks]
+    assert [c.batch for c in graph.chunks] == [c.batch for c in host.chunks]
+    with pytest.raises(KeyError):
+        # no graph form bound for the adaptive family
+        plan_schedule(ScheduleSpec.parse("awf,1,backend=graph"), n=100, p=4)
+
+
+def test_max_chunks_bound_honors_spec_chunk_param():
+    from repro.core.jax_sched import max_chunks_bound
+
+    assert max_chunks_bound(ScheduleSpec.parse("ss,64"), 100_000, 8) \
+        == math.ceil(100_000 / 64)
+    assert max_chunks_bound("ss", 100_000, 8, chunk_param=64) \
+        == math.ceil(100_000 / 64)
+
+
+def test_make_technique_shim_accepts_specs_and_strings():
+    a = make_technique("fac2", n=1000, p=4, chunk_param=7)
+    b = make_technique(ScheduleSpec("fac2", 7), n=1000, p=4)
+    c = make_technique("fac2,7", n=1000, p=4)
+    assert a.chunk_param == b.chunk_param == c.chunk_param == 7
+    with pytest.raises(KeyError):
+        make_technique("bogus", n=10, p=2)
+
+
+# -- plugin path ---------------------------------------------------------------
+
+
+@register_technique
+class _HalfGSS(Technique):
+    """Test plugin: GSS at half aggression (R/2P per request)."""
+
+    spec = TechniqueSpec("halfgss_test", False, False, "atomic", 2.0)
+
+    def _chunk_size(self, worker: int) -> int:
+        return math.ceil(self.remaining / (2 * self.p))
+
+
+def test_registered_plugin_resolves_and_runs():
+    spec = resolve("halfgss_test,16")
+    assert spec.entry.cls is _HalfGSS
+    assert "halfgss_test" in TECHNIQUES  # live view picks up the plugin
+
+    w = sphynx_like(n=5_000)
+    rec = simulate(spec, w, p=4)[0].record
+    assert rec.technique == "halfgss_test"
+    assert rec.n_chunks > 0
+
+    plan = plan_schedule(spec, n=5_000, p=4)
+    plan.validate()
+    assert min(c.size for c in plan.chunks[:-1]) >= 16  # chunk_param floor
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+
+        @register_technique
+        class _Dup(Technique):  # noqa: F811
+            spec = TechniqueSpec("halfgss_test", False, False, "atomic", 1.0)
+
+
+def test_custom_technique_example_end_to_end():
+    """The shipped plugin example runs simulator + planner + AutoSelector
+    + in-graph agreement without touching src/repro/core."""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               PYTHONPATH=str(root / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, str(root / "examples" / "custom_technique.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "agrees with host reference" in out.stdout
+    assert "AutoSelector" in out.stdout
