@@ -1,0 +1,118 @@
+"""Event-vs-batch engine timing on the paper-campaign grid.
+
+Measures the same technique x workload x repetition grid twice — once
+stepping the discrete-event oracle per config (what the campaign did
+before), once through `repro.core.simulate_batch` — verifies the results
+agree bit-for-bit, and records the wall-clock ratio under
+benchmarks/results/ so the perf trajectory accumulates run over run.
+
+    PYTHONPATH=src python -m benchmarks.batch_bench [--quick] [--reps N]
+
+The full grid mirrors the paper's statistical protocol (every config
+repeated; LB4OMP Sec. 4 runs 20 repetitions per configuration) — the
+regime the batch engine is built for: plans and provably-identical grid
+points are shared across the repetition axis, and the remaining lanes
+step vectorized rounds instead of one heapq event at a time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+from repro.core import (
+    NOISY_PROFILE,
+    batch_grid,
+    dist_loop,
+    gromacs_like,
+    nab_like,
+    simulate,
+    simulate_batch,
+    sphynx_like,
+)
+
+from .common import RESULTS
+from .paper_campaign import TECHS
+
+P = 20
+
+
+def campaign_grid(n: int = 100_000, reps: int = 10):
+    """The fig5-shaped campaign: full portfolio x 4 loop classes x reps."""
+    loops = [sphynx_like(n=n), gromacs_like(n=n),
+             dist_loop("L1", n=max(n // 100, 100)), nab_like()]
+    return batch_grid(TECHS, loops, ps=(P,), chunk_params=(None,),
+                      seeds=tuple(range(reps)), chunk_cold_cost=2e-6)
+
+
+def run(n: int = 100_000, reps: int = 10) -> dict:
+    configs = campaign_grid(n=n, reps=reps)
+
+    t0 = time.perf_counter()
+    batch = simulate_batch(configs, profile=NOISY_PROFILE)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    event = [
+        simulate(c.technique, c.workload, c.p, c.chunk_param, seed=c.seed,
+                 chunk_cold_cost=c.chunk_cold_cost, profile=NOISY_PROFILE)
+        for c in configs
+    ]
+    t_event = time.perf_counter() - t0
+
+    mismatches = sum(
+        b[0].record.t_par != e[0].record.t_par
+        for b, e in zip(batch, event))
+    return dict(
+        name="batch_speedup/campaign",
+        grid_configs=len(configs),
+        techniques=len(TECHS),
+        workloads=4,
+        reps=reps,
+        n=n,
+        p=P,
+        t_event_s=round(t_event, 3),
+        t_batch_s=round(t_batch, 3),
+        speedup=round(t_event / t_batch, 1),
+        agreement_mismatches=mismatches,
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    )
+
+
+def rows(n: int = 100_000, reps: int = 10) -> list[dict]:
+    """benchmarks.run entry point (name,us_per_call,derived rows)."""
+    r = run(n=n, reps=reps)
+    r["us_per_call"] = r["t_batch_s"] * 1e6 / max(r["grid_configs"], 1)
+    return [r]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI (writes batch_quickbench.json)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="repetitions per config (default 10, quick 3)")
+    args = ap.parse_args()
+    reps = args.reps if args.reps is not None else (3 if args.quick else 10)
+    n = 20_000 if args.quick else 100_000
+    result = run(n=n, reps=reps)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / ("batch_quickbench.json" if args.quick
+                     else "batch_speedup.json")
+    history = []
+    if out.exists():
+        prev = json.loads(out.read_text())
+        history = prev if isinstance(prev, list) else [prev]
+    history.append(result)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(result, indent=2))
+    if result["agreement_mismatches"]:
+        raise SystemExit("batch engine disagrees with the event oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -126,14 +126,17 @@ def packing() -> list[dict]:
 
 def auto_select() -> list[dict]:
     """The paper's future work, realized: bandit selection over the
-    portfolio converges to the right technique per regime."""
+    portfolio converges to the right technique per regime.  Arm
+    evaluation runs on the vectorized batch engine (identical results,
+    lower wall-clock — see core.auto.auto_simulate)."""
     import numpy as np
     from repro.core import NOISY_PROFILE, auto_simulate, gromacs_like, sphynx_like, simulate
 
     rows = []
     # regime 1: fine-granularity regular loop -> STATIC should win
     w = gromacs_like(n=50_000)
-    sel, hist = auto_simulate(w, p=20, timesteps=30, profile=NOISY_PROFILE)
+    sel, hist = auto_simulate(w, p=20, timesteps=30, profile=NOISY_PROFILE,
+                              engine="batch")
     rows.append(dict(name="auto_select/fine_regular", us_per_call=0.0,
                      chosen=str(sel.best),
                      regret_last10=round(float(
@@ -145,7 +148,8 @@ def auto_select() -> list[dict]:
     w2 = sphynx_like(n=50_000)
     speeds = np.ones(20)
     speeds[:5] = 1.8
-    sel2, hist2 = auto_simulate(w2, p=20, timesteps=30, speeds=speeds)
+    sel2, hist2 = auto_simulate(w2, p=20, timesteps=30, speeds=speeds,
+                                engine="batch")
     static_t = simulate("static", w2, p=20, speeds=speeds)[0].record.t_par
     rows.append(dict(name="auto_select/hetero_irregular", us_per_call=0.0,
                      chosen=str(sel2.best),

@@ -1,6 +1,6 @@
 """Paper-figure reproductions (one function per table/figure).
 
-  fig2_fig3  — chunk-size progression, SPHYNX L1, P=20, chunk_param=97
+  fig2_3  — chunk-size progression, SPHYNX L1, P=20, chunk_param=97
   fig5       — DIST + application loops campaign: T_par per technique,
                Best combination, %-degradation vs Best
   fig6       — c.o.v. / p.i. for the most time-consuming SPHYNX loop
@@ -8,6 +8,13 @@
   fig8       — STREAM sustained bandwidth per technique
   fig9_10    — chunk-parameter sweep (default vs best; the U-shape)
   fig11      — chunk progression under chunk-param thresholds 781/3125
+
+Every sweep-shaped figure runs on the vectorized batch engine
+(`repro.core.simulate_batch`): the whole technique x workload x param
+grid is simulated in one config-parallel pass, with results identical to
+per-config `simulate` calls (the engines are agreement-tested).  This is
+what makes the full campaign cheap enough to re-run on every change —
+see benchmarks/batch_bench.py for the measured speedup.
 """
 
 from __future__ import annotations
@@ -16,13 +23,14 @@ import numpy as np
 
 from repro.core import (
     NOISY_PROFILE,
+    BatchConfig,
     LoopRecorder,
     ScheduleSpec,
     best_combination,
     dist_loop,
     gromacs_like,
     nab_like,
-    simulate,
+    simulate_batch,
     sphynx_like,
     stream_loop,
 )
@@ -36,15 +44,20 @@ TECHS = tuple(ScheduleSpec.parse(t) for t in (
     "tap", "bold", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf"))
 
 
+def _records(configs, **kw):
+    """One batch pass -> the per-config LoopInstanceRecord (timesteps=1)."""
+    return [res[0].record for res in simulate_batch(configs, **kw)]
+
+
 def fig2_fig3(n: int = 200_000) -> list[dict]:
     """Chunk-size progressions (Fig. 2 non-adaptive / Fig. 3 adaptive)."""
     w = sphynx_like(n=n)
+    techs = [t for t in TECHS if t.technique not in ("static", "ss")]
+    # constant lines (static/ss) are not plotted in the paper either
+    configs = [BatchConfig(technique=t.with_chunk_param(97), workload=w, p=P)
+               for t in techs]
     rows = []
-    for t in TECHS:
-        if t.technique in ("static", "ss"):
-            continue  # constant lines, not plotted in the paper either
-        r = simulate(t.with_chunk_param(97), w, p=P,
-                     record_chunks=True)[0].record
+    for t, r in zip(techs, _records(configs, record_chunks=True)):
         sizes = [c.size for c in r.chunks]
         rows.append(dict(
             name=f"fig2_3/{t}", us_per_call=r.t_par * 1e6,
@@ -63,11 +76,12 @@ def fig5(n_dist: int = 1000, seed: int = 0) -> list[dict]:
              for l in ("L0", "L1", "L2", "L3", "L4")}
     loops["sphynx-L1"] = sphynx_like(n=100_000, seed=seed)
     loops["nab-L0"] = nab_like(seed=seed)
-    for w in loops.values():
-        for t in TECHS:
-            for rep in range(3):
-                simulate(t, w, p=P, recorder=rec, profile=NOISY_PROFILE,
-                         chunk_cold_cost=2e-6, seed=rep)
+    configs = [
+        BatchConfig(technique=t, workload=w, p=P, chunk_cold_cost=2e-6,
+                    seed=rep)
+        for w in loops.values() for t in TECHS for rep in range(3)
+    ]
+    simulate_batch(configs, recorder=rec, profile=NOISY_PROFILE)
     summary = rec.summary()
     best = best_combination(summary)
     rows = []
@@ -91,44 +105,45 @@ def fig5(n_dist: int = 1000, seed: int = 0) -> list[dict]:
 def fig6(n: int = 200_000) -> list[dict]:
     """Load imbalance metrics for the most time-consuming SPHYNX loop."""
     w = sphynx_like(n=n)
-    rows = []
-    for t in TECHS:
-        r = simulate(t, w, p=P)[0].record
-        rows.append(dict(name=f"fig6/{t}", us_per_call=r.t_par * 1e6,
-                         cov=round(r.cov, 4),
-                         percent_imbalance=round(r.percent_imbalance, 3)))
-    return rows
+    configs = [BatchConfig(technique=t, workload=w, p=P) for t in TECHS]
+    return [dict(name=f"fig6/{t}", us_per_call=r.t_par * 1e6,
+                 cov=round(r.cov, 4),
+                 percent_imbalance=round(r.percent_imbalance, 3))
+            for t, r in zip(TECHS, _records(configs))]
 
 
 def fig7(n: int = 200_000) -> list[dict]:
     """Scheduling-overhead exposure on the fine-granularity loop."""
     w = gromacs_like(n=n)
-    rows = []
-    base = None
-    for t in TECHS:
-        r = simulate(t, w, p=P, numa_penalty=0.6, chunk_cold_cost=2e-7,
-                     profile=NOISY_PROFILE)[0].record
-        if t.technique == "static":
-            base = r.t_par
-        rows.append(dict(
-            name=f"fig7/{t}", us_per_call=r.t_par * 1e6,
-            overhead_vs_static_pct=round(100 * (r.t_par / base - 1), 1),
-            n_chunks=r.n_chunks,
-            sched_time_us=round(r.sched_time * 1e6, 2)))
-    return rows
+    configs = [BatchConfig(technique=t, workload=w, p=P, numa_penalty=0.6,
+                           chunk_cold_cost=2e-7) for t in TECHS]
+    recs = _records(configs, profile=NOISY_PROFILE)
+    base = next(r.t_par for t, r in zip(TECHS, recs)
+                if t.technique == "static")
+    return [dict(
+        name=f"fig7/{t}", us_per_call=r.t_par * 1e6,
+        overhead_vs_static_pct=round(100 * (r.t_par / base - 1), 1),
+        n_chunks=r.n_chunks,
+        sched_time_us=round(r.sched_time * 1e6, 2))
+        for t, r in zip(TECHS, recs)]
 
 
 def fig8(n: int = 200_000) -> list[dict]:
     """STREAM sustained-bandwidth proxy: bytes moved / T_par."""
+    techs = tuple(map(ScheduleSpec.parse,
+                      ("static", "ss", "gss", "fac", "mfac", "fac2", "awf_b",
+                       "af", "maf")))
+    kernels = ("copy", "scale", "add", "triad")
+    loops = {k: stream_loop(k, n=n) for k in kernels}
+    configs = [BatchConfig(technique=t, workload=loops[k], p=P,
+                           numa_penalty=0.8, chunk_cold_cost=2e-7)
+               for k in kernels for t in techs]
+    recs = iter(_records(configs, profile=NOISY_PROFILE))
     rows = []
-    for kernel in ("copy", "scale", "add", "triad"):
-        w = stream_loop(kernel, n=n)
-        total_bytes = w.meta["bytes_per_iter"] * n
-        for t in map(ScheduleSpec.parse,
-                     ("static", "ss", "gss", "fac", "mfac", "fac2", "awf_b",
-                      "af", "maf")):
-            r = simulate(t, w, p=P, numa_penalty=0.8, chunk_cold_cost=2e-7,
-                         profile=NOISY_PROFILE)[0].record
+    for kernel in kernels:
+        total_bytes = loops[kernel].meta["bytes_per_iter"] * n
+        for t in techs:
+            r = next(recs)
             bw = total_bytes / r.t_par / 1e6  # MB/s
             rows.append(dict(name=f"fig8/{kernel}/{t}",
                              us_per_call=r.t_par * 1e6,
@@ -139,18 +154,22 @@ def fig8(n: int = 200_000) -> list[dict]:
 def fig9_10(n: int = 200_000) -> list[dict]:
     """Chunk-parameter sweep: N/2P, N/4P, ..., 1 (the Fig. 10 U-shape)."""
     w = sphynx_like(n=n)
-    rows = []
     params = [1]
     cp = n // (2 * P)
     while cp > 1:
         params.append(cp)
         cp //= 2
-    for t in map(ScheduleSpec.parse,
-                 ("ss", "gss", "fac2", "fsc", "awf_b", "af", "maf")):
+    techs = tuple(map(ScheduleSpec.parse,
+                      ("ss", "gss", "fac2", "fsc", "awf_b", "af", "maf")))
+    configs = [BatchConfig(technique=t.with_chunk_param(cpv), workload=w,
+                           p=P, chunk_cold_cost=5e-6)
+               for t in techs for cpv in params]
+    recs = iter(_records(configs))
+    rows = []
+    for t in techs:
         best_cp, best_t = None, np.inf
         for cpv in params:
-            r = simulate(t.with_chunk_param(cpv), w, p=P,
-                         chunk_cold_cost=5e-6)[0].record
+            r = next(recs)
             rows.append(dict(name=f"fig9_10/{t}/cp={cpv}",
                              us_per_call=r.t_par * 1e6,
                              n_chunks=r.n_chunks,
@@ -165,12 +184,16 @@ def fig9_10(n: int = 200_000) -> list[dict]:
 def fig11(n: int = 1_000_000) -> list[dict]:
     """Chunk progression with thresholds N/(64P)=781 and N/(16P)=3125."""
     w = sphynx_like(n=n)
+    techs = tuple(map(ScheduleSpec.parse,
+                      ("gss", "fac2", "awf_b", "af", "maf", "tap")))
+    cps = (n // (64 * P), n // (16 * P))
+    configs = [BatchConfig(technique=t.with_chunk_param(cp), workload=w, p=P)
+               for cp in cps for t in techs]
+    recs = iter(_records(configs, record_chunks=True))
     rows = []
-    for cp in (n // (64 * P), n // (16 * P)):
-        for t in map(ScheduleSpec.parse,
-                     ("gss", "fac2", "awf_b", "af", "maf", "tap")):
-            r = simulate(t.with_chunk_param(cp), w, p=P,
-                         record_chunks=True)[0].record
+    for cp in cps:
+        for t in techs:
+            r = next(recs)
             sizes = [c.size for c in r.chunks]
             at_threshold = sum(1 for s in sizes if s == cp)
             rows.append(dict(

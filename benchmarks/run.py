@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from . import framework_bench, paper_campaign
+from . import batch_bench, framework_bench, paper_campaign
 from .common import emit
 
 
@@ -38,6 +38,8 @@ def main() -> None:
         "serving": framework_bench.serving,
         "kernels": framework_bench.kernels,
         "packing": framework_bench.packing,
+        "batch_speedup": lambda: batch_bench.rows(
+            n=n_small, reps=3 if args.fast else 10),
     }
     # roofline needs dry-run artifacts; include when present
     try:

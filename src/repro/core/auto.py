@@ -27,6 +27,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from .batch_sim import BatchConfig, simulate_batch
 from .schedule import ScheduleSpec, resolve
 from .simulator import OverheadModel, ProfileModel, EXACT_PROFILE, simulate
 from .workloads import Workload
@@ -115,6 +116,29 @@ class AutoSelector:
                 for k, n, m in zip(self._keys, self._n, self._mean)}
 
 
+def _deterministic_prefix(sel: AutoSelector, timesteps: int) -> list[int]:
+    """The choice sequence that does not depend on measured rewards.
+
+    Both policies start with reward-free exploration — explore_commit runs
+    each arm ``explore_steps`` times, UCB1 runs each unseen arm once — and
+    `choose()` during that phase is a pure function of the visit counts.
+    Replaying the count bookkeeping yields the exact arm sequence the
+    sequential loop would produce, which is what lets the arm-evaluation
+    phase run as one vectorized `simulate_batch` grid.
+    """
+    n = sel._n.copy()
+    need = sel.explore_steps if sel.policy == "explore_commit" else 1
+    seq: list[int] = []
+    for _ in range(timesteps):
+        i = next((j for j in range(len(sel.candidates)) if n[j] < need),
+                 None)
+        if i is None:
+            break
+        n[i] += 1
+        seq.append(i)
+    return seq
+
+
 def auto_simulate(
     workload: Workload,
     p: int,
@@ -127,21 +151,58 @@ def auto_simulate(
     profile: ProfileModel = EXACT_PROFILE,
     overhead: OverheadModel = OverheadModel(),
     seed: int = 0,
+    engine: str = "event",
 ) -> tuple[AutoSelector, list[dict]]:
     """Run `timesteps` loop instances, selecting the technique per step.
+
+    ``engine="batch"`` evaluates every step whose technique choice is
+    already determined as one vectorized `simulate_batch` grid instead of
+    stepping the event simulator per arm: the reward-free exploration
+    prefix for both policies, plus (for explore_commit) the entire
+    committed tail.  Results are identical to ``engine="event"`` — the
+    batch engine agrees with the oracle and the arm sequence and per-step
+    seeds are replayed exactly; only the wall-clock changes.  UCB's
+    post-exploration steps stay sequential (each choice depends on the
+    previous rewards).
 
     NOTE: adaptive techniques restart their state on re-selection (a
     selector switch is a new execution context) — matching how a runtime
     would swap OMP_SCHEDULE between time-steps.
     """
+    if engine not in ("event", "batch"):
+        raise ValueError(f"engine must be 'event' or 'batch', got {engine!r}")
     sel = selector or AutoSelector()
     history: list[dict] = []
-    for ts in range(timesteps):
+
+    def _record(spec: ScheduleSpec, rec) -> None:
+        sel.record(spec, rec.t_par)
+        history.append(dict(step=len(history), technique=str(spec),
+                            t_par=rec.t_par, pi=rec.percent_imbalance))
+
+    def _run_batch(specs: list[ScheduleSpec], ts0: int) -> None:
+        configs = [
+            BatchConfig(technique=s, workload=workload, p=p,
+                        chunk_param=chunk_param, speeds=speeds,
+                        perturb=perturb, seed=seed + ts0 + k)
+            for k, s in enumerate(specs)
+        ]
+        results = simulate_batch(configs, overhead=overhead, profile=profile)
+        for s, res in zip(specs, results):
+            _record(s, res[0].record)
+
+    start = 0
+    if engine == "batch":
+        prefix = _deterministic_prefix(sel, timesteps)
+        _run_batch([sel.candidates[i] for i in prefix], 0)
+        start = len(prefix)
+        if sel.policy == "explore_commit" and start < timesteps:
+            committed = sel.choose()  # commits once; cached hereafter
+            _run_batch([committed] * (timesteps - start), start)
+            start = timesteps
+    for ts in range(start, timesteps):
         spec = sel.choose()
         rec = simulate(spec, workload, p=p, chunk_param=chunk_param,
                        speeds=speeds, perturb=perturb, profile=profile,
                        overhead=overhead, seed=seed + ts)[0].record
-        sel.record(spec, rec.t_par)
-        history.append(dict(step=ts, technique=str(spec), t_par=rec.t_par,
-                            pi=rec.percent_imbalance))
+        _record(spec, rec)
     return sel, history

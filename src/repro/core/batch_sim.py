@@ -1,0 +1,722 @@
+"""Config-parallel batch simulation engine — the campaign accelerator.
+
+The discrete-event simulator (`core/simulator.py`) steps one heapq event
+at a time, which makes it the *oracle* but also the bottleneck of every
+sweep-shaped scenario: the paper's performance-analysis campaign (every
+technique x workload x thread-count x chunk-param pair), the follow-up
+algorithm-selection work that needs thousands of cheap schedule
+evaluations, and the property tests that grind through the registry.
+
+``simulate_batch`` runs a whole grid of configurations in one pass:
+
+  1. **Plan precompute.**  For every technique whose chunk sequence is a
+     pure function of (technique, n, p, params, seed) — i.e. neither
+     ``adaptive`` nor ``worker_dependent`` in its
+     :class:`~repro.core.schedule.TechniqueSpec` — the full (sizes,
+     starts, batches) schedule is materialized up front: closed NumPy
+     forms for the fixed-chunk family (static/ss/fsc) and tight scalar
+     recurrences for gss/tap (the techniques whose chunk counts explode
+     on fine-granularity loops), with the host reference state machines
+     draining the rest (factoring family and plugins — a few hundred
+     chunks each).  These are the same chunk values `jax_sched`'s graph
+     forms compute in-graph; the host path is used here because a fresh
+     XLA compile per grid point would dwarf the simulation itself.
+  2. **Vectorized recurrence.**  The shared-queue dynamics reduce to:
+     chunk k goes to the worker with the least (ready_time, tiebreak);
+     its clock advances by the chunk's scheduling + execution cost.
+     That recurrence is stepped once per chunk index with NumPy across
+     *all* live lanes (a lane = one (config, timestep) instance), so the
+     per-event Python cost is amortized over the whole grid.  Overheads,
+     ccNUMA locality, heterogeneous speeds, deterministic perturbation,
+     and the FAC mutex critical section are modelled bit-identically to
+     the event loop.
+
+Adaptive / worker-dependent techniques (AWF*/AF/mAF/BOLD, WF2) and
+rng-taking ``perturb(ts, worker, rng)`` callbacks cannot be pre-planned
+— their chunk sizes depend on who requests and what was measured — so
+those configs fall back to the event-driven oracle, keeping
+``simulate_batch`` exact across the entire registry.  (A 2-argument
+``perturb(ts, worker)`` is assumed to be a pure function — the same
+contract `simulate`'s docstring states — since impurity is not
+detectable from the signature.)  Agreement (t_par, per-thread finish times, chunk
+counts) is property-tested in tests/test_batch_sim.py; the campaign
+speedup is tracked by benchmarks/batch_bench.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from .metrics import LoopInstanceRecord, LoopRecorder
+from .schedule import ScheduleSpec, resolve
+from .simulator import (
+    EXACT_PROFILE,
+    OverheadModel,
+    ProfileModel,
+    SimResult,
+    _technique_kwargs,
+    simulate,
+)
+from .techniques import ChunkGrant, Technique
+from .workloads import Workload
+
+__all__ = ["BatchConfig", "batch_grid", "simulate_batch"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BatchConfig:
+    """One grid point: everything ``simulate`` takes, as data.
+
+    ``overhead``/``profile`` override the batch-wide models when set, so
+    heterogeneous grids (e.g. the paper's EXACT vs NOISY profiling
+    regimes) can run in a single ``simulate_batch`` call.
+    """
+
+    technique: Union[ScheduleSpec, str, Technique]
+    workload: Workload
+    p: int
+    chunk_param: Optional[int] = None
+    timesteps: int = 1
+    speeds: Optional[Sequence[float]] = None
+    numa_penalty: float = 0.0
+    chunk_cold_cost: float = 0.0
+    weights: Optional[Sequence[float]] = None
+    perturb: Optional[Callable] = None
+    seed: int = 0
+    overhead: Optional[OverheadModel] = None
+    profile: Optional[ProfileModel] = None
+
+
+def batch_grid(
+    techniques: Sequence[Union[ScheduleSpec, str]],
+    workloads: Sequence[Workload],
+    ps: Sequence[int] = (20,),
+    chunk_params: Sequence[Optional[int]] = (None,),
+    seeds: Sequence[int] = (0,),
+    **common,
+) -> list[BatchConfig]:
+    """Cartesian grid helper over all five axes.
+
+    Order is workload-major: workload varies slowest, then technique, p,
+    chunk_param, and seed fastest — configs sharing a workload stay
+    adjacent, which is also the order the campaign drivers iterate."""
+    return [
+        BatchConfig(technique=t, workload=w, p=p, chunk_param=cp, seed=s,
+                    **common)
+        for w in workloads
+        for t in techniques
+        for p in ps
+        for cp in chunk_params
+        for s in seeds
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Plan precompute
+# ---------------------------------------------------------------------------
+
+
+class _Plan:
+    __slots__ = ("sizes", "starts", "batches", "leader")
+
+    def __init__(self, sizes, starts, batches):
+        self.sizes = np.asarray(sizes, np.int64)
+        self.starts = np.asarray(starts, np.int64)
+        self.batches = np.asarray(batches, np.int64)
+        # first request of each batch (the mutex critical-section leader)
+        leader = np.zeros(len(self.batches), bool)
+        if len(self.batches):
+            _, first = np.unique(self.batches, return_index=True)
+            leader[first] = True
+        self.leader = leader
+
+    def __len__(self) -> int:
+        return len(self.sizes)
+
+
+def _fixed_plan(n: int, c: int) -> _Plan:
+    """Constant chunk c with a clipped tail; batch index == request index."""
+    k = -(-n // c)
+    sizes = np.full(k, c, np.int64)
+    sizes[-1] = n - (k - 1) * c
+    return _Plan(sizes, np.arange(k, dtype=np.int64) * c,
+                 np.arange(k, dtype=np.int64))
+
+
+def _plan_static(n: int, p: int, cp: int) -> _Plan:
+    if cp > 1:
+        return _fixed_plan(n, cp)
+    base, rem = divmod(n, p)
+    nat = [base + (1 if i < rem else 0) for i in range(p)]
+    sizes = np.asarray([s for s in nat if s > 0], np.int64)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return _Plan(sizes, starts, np.arange(len(sizes), dtype=np.int64))
+
+
+def _plan_fsc(spec: ScheduleSpec, n: int, p: int, cp: int,
+              kw: dict) -> _Plan:
+    # FSC is one formula evaluation, then fixed chunks: reuse the
+    # registered class so the calculus lives in exactly one place
+    tech = spec.make(n=n, p=p, **kw)
+    return _fixed_plan(n, max(tech._chunk, cp))
+
+
+def _plan_gss(n: int, p: int, cp: int) -> _Plan:
+    sizes = []
+    rem = n
+    while rem > 0:
+        c = min(max(-(-rem // p), cp), rem)
+        sizes.append(c)
+        rem -= c
+    sizes = np.asarray(sizes, np.int64)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return _Plan(sizes, starts, np.arange(len(sizes), dtype=np.int64))
+
+
+def _plan_tap(n: int, p: int, cp: int, kw: dict) -> _Plan:
+    # mirror TAP._init/_chunk_size exactly (same float64 operations)
+    mu = max(float(kw.get("mu", 1.0)), 1e-30)
+    sigma = max(float(kw.get("sigma", 0.0)), 0.0)
+    v = 1.3 * sigma / mu
+    sizes = []
+    rem = n
+    while rem > 0:
+        t = rem / p
+        c = t + v * v / 2.0 - v * math.sqrt(2.0 * t + v * v / 4.0)
+        c = max(1, int(math.ceil(c)))
+        c = min(max(c, cp), rem)
+        sizes.append(c)
+        rem -= c
+    sizes = np.asarray(sizes, np.int64)
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return _Plan(sizes, starts, np.arange(len(sizes), dtype=np.int64))
+
+
+def _drain_plan(tech: Technique, instance: int) -> _Plan:
+    """Drive a host reference instance through one loop instance."""
+    tech.begin_instance(instance)
+    sizes, starts, batches = [], [], []
+    while True:
+        g = tech.next_chunk(0)
+        if g is None:
+            break
+        sizes.append(g.size)
+        starts.append(g.start)
+        batches.append(g.batch)
+    tech.end_instance()
+    return _Plan(sizes, starts, batches)
+
+
+def _accepts_seed_kw(kw: dict) -> bool:
+    return "seed" in kw
+
+
+def _plans_for(spec: ScheduleSpec, n: int, p: int, timesteps: int,
+               kw: dict, cache: dict) -> list[_Plan]:
+    """One plan per timestep (a single shared plan when the technique is
+    deterministic across instances — everything except the seed-consuming
+    RNG techniques, whose generator state persists over time-steps).
+
+    Deterministic techniques are cached timesteps-agnostically (one plan,
+    replicated per call), so mixed-timesteps grids share it; seeded ones
+    key on timesteps because each instance drains fresh RNG state."""
+    t, cp = spec.technique, spec.chunk_param
+    seeded = _accepts_seed_kw(kw)
+    kwkey = tuple(sorted(kw.items()))
+    if seeded:
+        key = (t, cp, n, p, kwkey, timesteps)
+        plans = cache.get(key)
+        if plans is None:
+            tech = spec.make(n=n, p=p, **kw)
+            plans = [_drain_plan(tech, ts) for ts in range(timesteps)]
+            cache[key] = plans
+        return plans
+    key = (t, cp, n, p, kwkey)
+    plan = cache.get(key)
+    if plan is None:
+        if t == "static":
+            plan = _plan_static(n, p, cp)
+        elif t == "ss":
+            plan = _fixed_plan(n, cp)
+        elif t == "fsc":
+            plan = _plan_fsc(spec, n, p, cp, kw)
+        elif t == "gss":
+            plan = _plan_gss(n, p, cp)
+        elif t == "tap":
+            plan = _plan_tap(n, p, cp, kw)
+        else:
+            plan = _drain_plan(spec.make(n=n, p=p, **kw), 0)
+        cache[key] = plan
+    return [plan] * timesteps
+
+
+# ---------------------------------------------------------------------------
+# Vectorized worker-assignment / finish-time recurrence
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One (config, timestep) instance on the fast path."""
+
+    config_idx: int
+    instance: int
+    cfg: BatchConfig
+    spec: ScheduleSpec
+    plan: _Plan
+    speeds_eff: np.ndarray  # (p,) speeds * perturb(ts, w)
+    overhead: OverheadModel
+
+    @property
+    def n(self) -> int:
+        return self.cfg.workload.n
+
+    @property
+    def p(self) -> int:
+        return self.cfg.p
+
+
+def _lane_speeds(cfg: BatchConfig, ts: int) -> np.ndarray:
+    p = cfg.p
+    speeds = (np.ones(p) if cfg.speeds is None
+              else np.asarray(cfg.speeds, float))
+    if speeds.shape != (p,):
+        raise ValueError(f"speeds must have shape ({p},)")
+    if cfg.perturb is not None:
+        # the event loop evaluates perturb per chunk; a *pure* f(ts, w)
+        # makes that equivalent to one evaluation per (timestep, worker).
+        # Purity of 2-arg callbacks is the caller's contract (see
+        # simulate_batch) — only the 3-arg rng form is detectably
+        # stateful and routed to the oracle.
+        speeds = np.array([speeds[w] * cfg.perturb(ts, w) for w in range(p)])
+    return speeds
+
+
+def _run_lane_band(lanes: list[_Lane], mutex: bool, numa: bool,
+                   record_chunks: bool):
+    """Run one band of lanes, bit-identically to the event-driven oracle.
+
+    Bands group lanes by (mutex critical section?, numa penalty?) so the
+    inner loop only pays for the terms its lanes actually use.  The
+    atomic-sync band (everything except FAC) steps the recurrence in
+    *rounds* of up to P forced assignments per lane per numpy step
+    (:func:`_run_band_rounds`); the mutex band, whose workers couple
+    through the critical section, steps one chunk index at a time
+    (:func:`_run_band_chunkwise`) — FAC-family chunk counts are small, so
+    that path is never the bottleneck.
+    """
+    del record_chunks  # both paths always produce the worker log
+    if mutex:
+        return _run_band_chunkwise(lanes, numa=numa)
+    return _run_band_rounds(lanes, numa=numa)
+
+
+def _flatten_lanes(lanes: list[_Lane]):
+    """Flatten a band's plans: per-lane (nch, offs) plus flat per-chunk
+    (sizes, starts, base-cost) arrays.  ``base`` is the worker-independent
+    execution cost (csum[start+size] - csum[start]) — the exact float64
+    operands the event oracle uses, so downstream math stays bit-identical.
+    """
+    nch = np.asarray([len(l.plan) for l in lanes], np.int64)
+    offs = np.concatenate([[0], np.cumsum(nch)[:-1]])
+    sizes_flat = np.concatenate([l.plan.sizes for l in lanes])
+    starts_flat = np.concatenate([l.plan.starts for l in lanes])
+    base_flat = np.empty(int(nch.sum()))
+    csum_cache: dict[int, np.ndarray] = {}
+    for li, l in enumerate(lanes):
+        w = l.cfg.workload
+        csum = csum_cache.get(id(w))
+        if csum is None:
+            csum = np.concatenate([[0.0], np.cumsum(w.costs)])
+            csum_cache[id(w)] = csum
+        sl = slice(offs[li], offs[li] + nch[li])
+        base_flat[sl] = (csum[starts_flat[sl] + sizes_flat[sl]]
+                         - csum[starts_flat[sl]])
+    return nch, offs, sizes_flat, starts_flat, base_flat
+
+
+def _lane_stats(lanes, offs, nch, wlog, e_log, s_log, done_log):
+    """Post-pass: fold per-chunk logs into per-worker busy/sched/finish."""
+    out = []
+    for li, l in enumerate(lanes):
+        p = l.p
+        sl = slice(offs[li], offs[li] + nch[li])
+        wl = wlog[sl]
+        busy = np.bincount(wl, weights=e_log[sl], minlength=p).astype(float)
+        sched = np.bincount(wl, weights=s_log[sl], minlength=p).astype(float)
+        finish = np.zeros(p)
+        finish[wl] = done_log[sl]  # done is monotone per worker: last wins
+        out.append((l, busy, sched, finish, wl))
+    return out
+
+
+def _run_band_rounds(lanes: list[_Lane], numa: bool):
+    """Vectorized rounds for the atomic-sync band.
+
+    The shared-queue heap process (pop least (ready, tiebreak) worker,
+    push it back at ready + cost) pops non-decreasing ready times, so
+    with the per-lane ready times sorted as r_1 <= ... <= r_P and the
+    next chunks' completion times d_j = (r_j + s) + e_j, the first j
+    assignments of a round are *forced* round-robin-in-sorted-order as
+    long as r_{j+1} <= min(d_1..d_j): nothing pushed this round can
+    overtake the remaining sorted prefix.  Each numpy step commits that
+    maximal forced prefix (>= 1 chunk, up to P) per live lane — on the
+    fixed-chunk techniques whose schedules have ~N/cp chunks (the lanes
+    that dominate a campaign grid) the prefix is almost always the full
+    round, cutting the Python-step count by ~P versus stepping one chunk
+    index at a time.  Lanes advance independent cursors, so mixed grids
+    stay dense.  Operand order matches the event loop exactly."""
+    L = len(lanes)
+    pmax = max(l.p for l in lanes)
+    nch, offs, sizes_flat, starts_flat, base_flat = _flatten_lanes(lanes)
+    total = int(nch.sum())
+
+    ready = np.full((L, pmax), np.inf)
+    tb = np.full((L, pmax), np.inf)
+    speeds_mat = np.ones((L, pmax))
+    pvec = np.asarray([l.p for l in lanes], np.int64)
+    tb_base = np.empty(L)
+    cold = np.empty(L)
+    sconst = np.empty(L)
+    for li, l in enumerate(lanes):
+        ready[li, :l.p] = 0.0
+        tb[li, :l.p] = np.arange(l.p, dtype=float)
+        speeds_mat[li, :l.p] = l.speeds_eff
+        tb_base[li] = float(l.n)
+        cold[li] = l.cfg.chunk_cold_cost
+        sconst[li] = ((l.overhead.o_dispatch
+                       + l.overhead.sync_cost(l.spec.meta.sync))
+                      + l.overhead.calc_cost(l.spec.meta.o_cs))
+    if numa:
+        pen = np.asarray([l.cfg.numa_penalty for l in lanes])
+        bounds = np.zeros((L, pmax + 1), np.int64)
+        for li, l in enumerate(lanes):
+            bounds[li, :l.p + 1] = np.linspace(0, l.n, l.p + 1).astype(np.int64)
+
+    wlog = np.zeros(total, np.int32)
+    e_log = np.zeros(total)
+    done_log = np.zeros(total)
+    s_log = np.repeat(sconst, nch)
+
+    cursor = np.zeros(L, np.int64)
+    jj = np.arange(pmax)
+    while True:
+        act = np.nonzero(cursor < nch)[0]
+        if not len(act):
+            break
+        r = ready[act]
+        t = tb[act]
+        rowsA = np.arange(len(act))[:, None]
+        # batched lexsort by (ready, tiebreak): stable argsort on the
+        # secondary key first, then on the reordered primary
+        o1 = np.argsort(t, axis=1, kind="stable")
+        o2 = np.argsort(r[rowsA, o1], axis=1, kind="stable")
+        ws = o1[rowsA, o2]                          # sorted worker ids
+        rs = r[rowsA, ws]                           # sorted ready times
+
+        cidx = cursor[act, None] + jj[None, :]
+        valid = (cidx < nch[act, None]) & (jj[None, :] < pvec[act, None])
+        flat = offs[act, None] + np.minimum(cidx, nch[act, None] - 1)
+        base = base_flat[flat]
+        if numa:
+            size = sizes_flat[flat]
+            lo = starts_flat[flat]
+            hi = lo + size
+            a2 = act[:, None]
+            local = np.maximum(
+                np.minimum(hi, bounds[a2, ws + 1])
+                - np.maximum(lo, bounds[a2, ws]), 0)
+            base = base * (1.0 + pen[act, None] * (1.0 - local / size))
+        e = base * speeds_mat[act[:, None], ws] + cold[act, None]
+        done = (rs + sconst[act, None]) + e
+        # forced prefix: position j needs r_{j+1} <= min(done_0..done_j)
+        pm = np.minimum.accumulate(np.where(valid, done, np.inf), axis=1)
+        forced = np.empty_like(valid)
+        forced[:, 0] = valid[:, 0]
+        forced[:, 1:] = valid[:, 1:] & (rs[:, 1:] <= pm[:, :-1])
+        forced = np.logical_and.accumulate(forced, axis=1)
+        adv = forced.sum(axis=1)
+
+        rows = np.repeat(act, adv)
+        wsel = ws[forced]
+        dsel = done[forced]
+        fsel = flat[forced]
+        ready[rows, wsel] = dsel
+        tb[rows, wsel] = tb_base[rows] + cidx[forced] + 1.0
+        wlog[fsel] = wsel
+        e_log[fsel] = e[forced]
+        done_log[fsel] = dsel
+        cursor[act] += adv
+
+    return _lane_stats(lanes, offs, nch, wlog, e_log, s_log, done_log)
+
+
+def _run_band_chunkwise(lanes: list[_Lane], numa: bool):
+    """Step the mutex (FAC-family) band in lockstep, one chunk index per
+    numpy step: the critical section couples every worker of a lane
+    through ``lock_free``, so assignments cannot be batched into forced
+    rounds.  FAC chunk counts are O(P log N), so this path is never the
+    bottleneck.  Lanes are sorted by descending chunk count: the active
+    set is always a prefix, and every per-step array op is a view over
+    live lanes only.
+
+    Returns per-lane (busy, sched, finish, worker_log) with the same
+    float64 operation order as the event-driven oracle, so results agree
+    bit-for-bit.
+    """
+    lanes = sorted(lanes, key=lambda l: -len(l.plan))
+    L = len(lanes)
+    pmax = max(l.p for l in lanes)
+    nch, offs, sizes_flat, starts_flat, base_flat = _flatten_lanes(lanes)
+
+    ready = np.full((L, pmax), np.inf)
+    tb = np.tile(np.arange(pmax, dtype=float), (L, 1))
+    speeds_mat = np.ones((L, pmax))
+    finish = np.zeros((L, pmax))
+    busy = np.zeros((L, pmax))
+    sched = np.zeros((L, pmax))
+    tb_base = np.empty(L)
+    cold = np.empty(L)
+    for li, l in enumerate(lanes):
+        ready[li, :l.p] = 0.0
+        speeds_mat[li, :l.p] = l.speeds_eff
+        tb_base[li] = float(l.n)
+        cold[li] = l.cfg.chunk_cold_cost
+
+    if numa:
+        pen = np.asarray([l.cfg.numa_penalty for l in lanes])
+        bounds = np.zeros((L, pmax + 1), np.int64)
+        for li, l in enumerate(lanes):
+            bounds[li, :l.p + 1] = np.linspace(0, l.n, l.p + 1).astype(np.int64)
+    leader_flat = np.concatenate([l.plan.leader for l in lanes])
+    o_disp_v = np.asarray([l.overhead.o_dispatch for l in lanes])
+    o_sync_v = np.asarray(
+        [l.overhead.sync_cost(l.spec.meta.sync) for l in lanes])
+    o_calc_v = np.asarray(
+        [l.overhead.calc_cost(l.spec.meta.o_cs) for l in lanes])
+    lock_free = np.zeros(L)
+
+    wlog = np.zeros(len(sizes_flat), np.int32)
+    ar_full = np.arange(L)
+    act = L
+    for k in range(int(nch[0])):
+        while act and nch[act - 1] <= k:
+            act -= 1
+        r = ready[:act]
+        t = r.min(axis=1)
+        # heap order: least ready time, then least insertion tiebreak
+        cand = np.where(r == t[:, None], tb[:act], np.inf)
+        w = cand.argmin(axis=1)
+        ar = ar_full[:act]
+        idx = offs[:act] + k
+        base = base_flat[idx]
+        if numa:
+            size = sizes_flat[idx]
+            lo = starts_flat[idx]
+            hi = lo + size
+            local = np.maximum(
+                np.minimum(hi, bounds[ar, w + 1])
+                - np.maximum(lo, bounds[ar, w]), 0)
+            base = base * (1.0 + pen[:act] * (1.0 - local / size))
+        e = base * speeds_mat[ar, w] + cold[:act]
+        # serialize through the critical section: the batch leader pays
+        # the full chunk calculation, followers re-read the shared value
+        start = np.maximum(t, lock_free[:act])
+        wait = start - t
+        hold = o_sync_v[:act] + np.where(
+            leader_flat[idx], o_calc_v[:act], 0.2 * o_calc_v[:act])
+        lock_free[:act] = start + hold
+        s = o_disp_v[:act] + wait + hold
+        done = t + s + e
+        ready[ar, w] = done
+        finish[ar, w] = done
+        busy[ar, w] += e
+        sched[ar, w] += s
+        tb[ar, w] = tb_base[:act] + (k + 1)
+        wlog[idx] = w
+
+    return [(l, busy[li, :l.p], sched[li, :l.p], finish[li, :l.p],
+             wlog[offs[li]:offs[li] + nch[li]])
+            for li, l in enumerate(lanes)]
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def _stateful_perturb(perturb: Optional[Callable]) -> bool:
+    if perturb is None:
+        return False
+    try:
+        return len(inspect.signature(perturb).parameters) >= 3
+    except (TypeError, ValueError):  # pragma: no cover - exotic callables
+        return True
+
+
+def _dedup_key(cfg: BatchConfig, spec: ScheduleSpec,
+               ov: OverheadModel, prof: ProfileModel):
+    """Memoization key for configs that are provably identical runs.
+
+    A campaign grid typically carries a seed axis for statistical
+    repetitions, but the simulator is deterministic: the seed only
+    reaches seed-consuming techniques (RAND) and rng-taking perturb
+    callbacks.  For every other config the seed axis re-runs the exact
+    same computation — the batch engine shares it (per-call `simulate`
+    cannot: it sees one config at a time).  Returns None when sharing is
+    unsafe (prebuilt instances, opaque perturb callables are keyed by
+    identity but seed-consumers never dedup across seeds)."""
+    if isinstance(cfg.technique, Technique):
+        return None
+    seed_live = (_accepts_seed(spec)           # RAND-style technique RNG
+                 or _stateful_perturb(cfg.perturb))  # rng-taking perturb
+    return (
+        spec, id(cfg.workload), cfg.p, cfg.timesteps,
+        None if cfg.speeds is None else tuple(cfg.speeds),
+        cfg.numa_penalty, cfg.chunk_cold_cost,
+        None if cfg.weights is None else tuple(cfg.weights),
+        None if cfg.perturb is None else id(cfg.perturb),
+        ov, prof,
+        cfg.seed if seed_live else None,
+    )
+
+
+def _accepts_seed(spec: ScheduleSpec) -> bool:
+    from .simulator import _accepts_seed as accepts
+    return accepts(spec.entry.cls)
+
+
+def _copy_result(res: SimResult) -> SimResult:
+    """Fresh record arrays for a deduplicated grid point, so callers can
+    mutate per-config results independently.  Oracle-path results keep
+    their (shared) post-run technique instance: a deduplicated config *is*
+    the same run, so the state machine that produced it is the same
+    object."""
+    r = res.record
+    return SimResult(
+        record=dataclasses.replace(
+            r,
+            thread_times=r.thread_times.copy(),
+            thread_finish=r.thread_finish.copy(),
+            chunks=None if r.chunks is None else list(r.chunks),
+        ),
+        technique=res.technique,
+    )
+
+
+def simulate_batch(
+    configs: Sequence[BatchConfig],
+    *,
+    overhead: OverheadModel = OverheadModel(),
+    profile: ProfileModel = EXACT_PROFILE,
+    recorder: Optional[LoopRecorder] = None,
+    record_chunks: bool = False,
+) -> list[list[SimResult]]:
+    """Simulate a grid of configurations in one vectorized pass.
+
+    Returns one ``list[SimResult]`` per config (one entry per timestep),
+    exactly like calling :func:`repro.core.simulate` per config — and
+    with identical results: worker-agnostic techniques run on the
+    vectorized fast path, adaptive / worker-dependent ones (and prebuilt
+    ``Technique`` instances or rng-taking 3-arg ``perturb`` callbacks) on
+    the event-driven oracle.  A 2-arg ``perturb(ts, worker)`` must be a
+    pure function (the contract `simulate` documents); the engine cannot
+    detect impurity from the signature.  Grid points that are provably the same run
+    (e.g. the statistical-repetition seed axis on a technique that never
+    reads the seed) are computed once and shared; ``recorder`` still
+    receives one record per (config, timestep), in config order.
+    """
+    results: list[Optional[list[SimResult]]] = [None] * len(configs)
+    fast_lanes: list[_Lane] = []
+    plan_cache: dict = {}
+    memo: dict = {}          # dedup key -> primary config index
+    aliases: dict[int, int] = {}  # alias config index -> primary index
+
+    for ci, cfg in enumerate(configs):
+        ov = cfg.overhead if cfg.overhead is not None else overhead
+        prof = cfg.profile if cfg.profile is not None else profile
+        if not isinstance(cfg.technique, Technique):
+            spec = resolve(cfg.technique, chunk_param=cfg.chunk_param)
+            meta = spec.meta
+            fast = not (meta.adaptive
+                        or getattr(meta, "worker_dependent", False)
+                        or _stateful_perturb(cfg.perturb))
+            key = _dedup_key(cfg, spec, ov, prof)
+            if key is not None:
+                prev = memo.setdefault(key, ci)
+                if prev != ci:
+                    aliases[ci] = prev
+                    continue
+        else:
+            fast = False
+        if not fast:
+            results[ci] = simulate(
+                cfg.technique, cfg.workload, cfg.p, cfg.chunk_param,
+                timesteps=cfg.timesteps, speeds=cfg.speeds,
+                numa_penalty=cfg.numa_penalty,
+                chunk_cold_cost=cfg.chunk_cold_cost, overhead=ov,
+                record_chunks=record_chunks,
+                weights=cfg.weights, perturb=cfg.perturb, profile=prof,
+                seed=cfg.seed)
+            continue
+        kw = _technique_kwargs(spec, cfg.workload, cfg.p, ov, cfg.weights,
+                               prof, seed=cfg.seed)
+        plans = _plans_for(spec, cfg.workload.n, cfg.p, cfg.timesteps, kw,
+                           plan_cache)
+        for ts in range(cfg.timesteps):
+            fast_lanes.append(_Lane(
+                config_idx=ci, instance=ts, cfg=cfg, spec=spec,
+                plan=plans[ts], speeds_eff=_lane_speeds(cfg, ts),
+                overhead=ov))
+        results[ci] = [None] * cfg.timesteps  # type: ignore[list-item]
+
+    # band by (mutex?, numa?) so each inner loop stays minimal
+    bands: dict[tuple[bool, bool], list[_Lane]] = {}
+    for lane in fast_lanes:
+        key = (lane.spec.meta.sync == "mutex", lane.cfg.numa_penalty > 0.0)
+        bands.setdefault(key, []).append(lane)
+
+    for (mutex, numa), band in bands.items():
+        for lane, busy, sched, finish, lane_w in _run_lane_band(
+                band, mutex=mutex, numa=numa, record_chunks=record_chunks):
+            cfg, spec, plan = lane.cfg, lane.spec, lane.plan
+            chunks = None
+            if record_chunks:
+                chunks = [
+                    ChunkGrant(start=int(plan.starts[i]),
+                               size=int(plan.sizes[i]),
+                               batch=int(plan.batches[i]),
+                               worker=int(lane_w[i]))
+                    for i in range(len(plan))
+                ]
+            rec = LoopInstanceRecord(
+                loop=cfg.workload.name,
+                technique=spec.technique,
+                instance=lane.instance,
+                p=cfg.p,
+                n=cfg.workload.n,
+                chunk_param=spec.chunk_param,
+                t_par=float(finish.max()),
+                thread_times=busy + sched,
+                thread_finish=finish.copy(),
+                n_chunks=len(plan),
+                sched_time=float(sched.sum()),
+                chunks=chunks,
+            )
+            results[lane.config_idx][lane.instance] = SimResult(record=rec)
+
+    for ci, prev in aliases.items():
+        results[ci] = [_copy_result(r) for r in results[prev]]
+
+    if recorder is not None:
+        # one record per (config, timestep), in config order — the same
+        # stream sequential per-config simulate calls would produce
+        for per_config in results:
+            for res in per_config:
+                recorder.add(res.record)
+    return results  # type: ignore[return-value]

@@ -144,8 +144,16 @@ class PlanContext:
 
 
 def _prefix_plan(sizes: jnp.ndarray, n: int):
-    """(sizes,) -> clipped (sizes, starts, count) triplet."""
+    """(sizes,) -> clipped (sizes, starts, count) triplet.
+
+    Enforces the ``plan_chunks`` contract both ways: sizes are clipped so
+    they never overrun ``n``, and any deficit left by an under-sized
+    ``max_chunks`` is folded into the last slot so the plan always
+    partitions ``[0, n)`` exactly (sum(sizes) == n).
+    """
     sizes = _clip_to_n(sizes, n)
+    deficit = n - jnp.sum(sizes)
+    sizes = sizes.at[-1].add(deficit.astype(jnp.int32))
     starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
                               jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
     count = jnp.sum((sizes > 0).astype(jnp.int32))
@@ -160,22 +168,15 @@ def _plan_static(ctx: PlanContext):
         sizes_np = np.full(ctx.mc, ctx.cp, np.int32)
     else:
         base, rem = divmod(ctx.n, ctx.p)
-        sizes_np = np.array(
-            [base + (1 if i < rem else 0) for i in range(ctx.p)]
-            + [0] * (ctx.mc - ctx.p), np.int32)
+        nat = [base + (1 if i < rem else 0) for i in range(ctx.p)][:ctx.mc]
+        sizes_np = np.array(nat + [0] * (ctx.mc - len(nat)), np.int32)
     return _prefix_plan(jnp.asarray(sizes_np), ctx.n)
 
 
 def _plan_ss(ctx: PlanContext):
-    full, tail = divmod(ctx.n, ctx.cp)
-    sizes_np = np.zeros(ctx.mc, np.int32)
-    sizes_np[:full] = ctx.cp
-    if tail:
-        sizes_np[full] = tail
-    sizes = jnp.asarray(sizes_np)
-    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                              jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
-    return sizes, starts, jnp.asarray(full + (1 if tail else 0), jnp.int32)
+    # fixed chunks of cp; _prefix_plan clips the natural tail and folds any
+    # under-sized-max_chunks remainder into the last slot
+    return _prefix_plan(jnp.full((ctx.mc,), ctx.cp, jnp.int32), ctx.n)
 
 
 def _plan_fsc(ctx: PlanContext):
@@ -263,6 +264,15 @@ def plan_chunks(
     count[int32]).  Entries past ``count`` are zero.  For weighted
     techniques (wf2) the i-th chunk belongs to worker i % p.
 
+    ``max_chunks`` contract: it is a *padding bound*, not a truncation —
+    the returned sizes always partition ``[0, n)`` exactly
+    (``sum(sizes) == n`` and ``count <= max_chunks``).  When a
+    caller-supplied ``max_chunks`` is smaller than the technique's natural
+    chunk count, the remainder is folded into the final slot (the last
+    chunk absorbs the tail), keeping the result a valid — if coarser —
+    schedule; this is jit-safe, unlike raising on a traced value.  An
+    explicit ``max_chunks < 1`` raises ``ValueError``.
+
     Dispatch is registry-driven: any technique whose entry carries a
     :class:`~repro.core.schedule.GraphForm` (including user-registered
     plugins) is plannable here; techniques without one raise ``KeyError``.
@@ -276,6 +286,8 @@ def plan_chunks(
             f"for {sorted(REGISTRY.graph_names())} (bind one with "
             f"repro.core.schedule.bind_graph_form)")
 
+    if max_chunks is not None and max_chunks < 1:
+        raise ValueError(f"max_chunks must be >= 1, got {max_chunks}")
     mc = int(max_chunks or max_chunks_bound(t, n, p, cp))
     cov = 0.0 if mu <= 0 else sigma / mu
     if weights is None:
@@ -301,6 +313,10 @@ def plan_chunks(
 
     def body(carry: _PlanCarry):
         c = next_size(carry)
+        # final slot: fold whatever remains so the plan always sums to n
+        # even when the caller's max_chunks under-estimates the round count
+        c = jnp.where(carry.i == mc - 1,
+                      jnp.maximum(n - carry.scheduled, 1).astype(jnp.int32), c)
         sizes = carry.sizes.at[carry.i].set(c)
         starts = carry.starts.at[carry.i].set(carry.scheduled)
         scheduled = carry.scheduled + c

@@ -72,6 +72,14 @@ class TechniqueSpec:
     ``sync`` the synchronization primitive the technique needs on a shared
     queue.  These mirror the paper's three-factor overhead decomposition
     (o_sr, o_cs, o_sync) and are calibrated in `core/simulator.py`.
+
+    ``worker_dependent`` marks techniques whose chunk *sizes* depend on the
+    identity of the requesting worker (e.g. WF2's fixed per-worker
+    weights).  Together with ``adaptive`` (sizes depend on measured
+    telemetry) it tells the batch engine (`core/batch_sim.py`) whether the
+    chunk sequence is a pure function of (technique, n, p, params, seed)
+    and can therefore be precomputed — plugin techniques whose sizes vary
+    per worker must set it to stay exact under ``simulate_batch``.
     """
 
     name: str
@@ -79,6 +87,7 @@ class TechniqueSpec:
     requires_profiling: bool
     sync: str  # "none" | "atomic" | "mutex"
     o_cs: float  # relative chunk-calculation cost (1.0 == one FLOP-ish op)
+    worker_dependent: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

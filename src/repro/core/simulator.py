@@ -28,7 +28,9 @@ The simulator is the *reference* substrate for the paper's campaign
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
+import inspect
 from typing import Optional, Sequence
 
 import numpy as np
@@ -75,8 +77,13 @@ class OverheadModel:
 
 @dataclasses.dataclass
 class SimResult:
+    """One loop-instance outcome.  ``technique`` is the live host state
+    machine that produced it — ``None`` for results materialized by the
+    vectorized batch engine (`core/batch_sim.py`), which plans chunks
+    without driving a host instance."""
+
     record: LoopInstanceRecord
-    technique: Technique
+    technique: Optional[Technique] = None
 
     @property
     def t_par(self) -> float:
@@ -125,10 +132,20 @@ def profile_workload(w: Workload,
     return profile.measure(w)
 
 
+@functools.lru_cache(maxsize=None)
+def _accepts_seed(cls: type) -> bool:
+    """Does this Technique subclass's ``_init`` consume a ``seed``?"""
+    try:
+        return "seed" in inspect.signature(cls._init).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins/exotic
+        return False
+
+
 def _technique_kwargs(spec: ScheduleSpec, w: Workload, p: int,
                       ov: OverheadModel,
                       weights: Optional[Sequence[float]],
-                      profile: ProfileModel) -> dict:
+                      profile: ProfileModel,
+                      seed: Optional[int] = None) -> dict:
     """Feed profiling info to the techniques that require it."""
     meta = spec.meta
     kw: dict = {}
@@ -139,7 +156,29 @@ def _technique_kwargs(spec: ScheduleSpec, w: Workload, p: int,
             kw["h"] = ov.per_request(meta)
     if spec.technique == "wf2" and weights is not None:
         kw["weights"] = weights
+    if seed is not None and _accepts_seed(spec.entry.cls):
+        kw["seed"] = seed
     return kw
+
+
+def _bind_perturb(perturb: Optional[callable], seed: int):
+    """Resolve the perturbation callback.
+
+    Two signatures are supported: ``f(timestep, worker)`` (deterministic,
+    as before) and ``f(timestep, worker, rng)`` — the latter receives a
+    ``numpy.random.Generator`` seeded from ``simulate``'s ``seed`` so
+    stochastic system-variation models are reproducible per seed.
+    """
+    if perturb is None:
+        return None
+    try:
+        nparams = len(inspect.signature(perturb).parameters)
+    except (TypeError, ValueError):
+        nparams = 2
+    if nparams >= 3:
+        rng = np.random.default_rng(seed)
+        return lambda ts, wkr: perturb(ts, wkr, rng)
+    return perturb
 
 
 def simulate(
@@ -178,6 +217,15 @@ def simulate(
         many small chunks expensive (paper Sec. 4.2/4.3).
       perturb: optional f(timestep, worker) -> extra multiplier, models
         system variation during execution (adaptive techniques should win).
+        Must be a pure function of (timestep, worker) — the batch engine
+        relies on that to evaluate it once per (timestep, worker).  For
+        stochastic variation use the 3-argument variant
+        f(timestep, worker, rng), which receives a Generator seeded from
+        ``seed`` and always runs on the event-driven path.
+      seed: seeds the stochastic elements of a run — it is forwarded to
+        seed-consuming techniques (e.g. RAND's chunk-size RNG) and to
+        3-argument ``perturb`` callbacks, so ``simulate(..., seed=k)`` is
+        reproducible per ``k`` and varies across seeds.
     """
     n = workload.n
     if isinstance(technique, Technique):
@@ -188,8 +236,10 @@ def simulate(
         spec = resolve(technique, chunk_param=chunk_param)
         tname = spec.technique
         chunk_param = spec.chunk_param
-        kw = _technique_kwargs(spec, workload, p, overhead, weights, profile)
+        kw = _technique_kwargs(spec, workload, p, overhead, weights, profile,
+                               seed=seed)
         tech = spec.make(n=n, p=p, **kw)
+    perturb = _bind_perturb(perturb, seed)
 
     csum = np.concatenate([[0.0], np.cumsum(workload.costs)])
     speeds_arr = np.ones(p) if speeds is None else np.asarray(speeds, float)

@@ -160,6 +160,19 @@ class Technique:
         """Called at the end of a loop instance (time-step boundary)."""
         pass
 
+    def inherit(self, other: "Technique") -> None:
+        """Adopt learned state from a predecessor instance.
+
+        Used when an execution context is re-planned over a different
+        iteration count (e.g. the serving scheduler rebuilding its
+        technique over a refreshed backlog): adaptive techniques carry
+        their measured per-worker statistics forward instead of
+        restarting cold.  Base implementation is a no-op; subclasses
+        copy whatever telemetry survives a change of ``n`` (anything
+        keyed per worker — ``p`` must match).
+        """
+        del other
+
 
 # ---------------------------------------------------------------------------
 # OpenMP-standard baselines
@@ -376,7 +389,8 @@ class WF2(_FactoringBase):
     the whole execution and normalized to sum to P.
     """
 
-    spec = TechniqueSpec("wf2", False, False, "atomic", 3.0)
+    spec = TechniqueSpec("wf2", False, False, "atomic", 3.0,
+                         worker_dependent=True)
 
     def _init(self, weights: Optional[Sequence[float]] = None, **kw):
         if weights is None:
@@ -492,6 +506,14 @@ class BOLD(Technique):
             self.mu = max(self._welford_mean, 1e-30)
             self.sigma = math.sqrt(self._welford_m2 / (self._welford_n - 1))
 
+    def inherit(self, other: Technique) -> None:
+        if not isinstance(other, BOLD) or other.p != self.p:
+            return
+        self.mu, self.sigma, self.h = other.mu, other.sigma, other.h
+        self._welford_n = other._welford_n
+        self._welford_mean = other._welford_mean
+        self._welford_m2 = other._welford_m2
+
 
 class _AWFBase(_FactoringBase):
     """Adaptive weighted factoring family (Banicescu, Velusamy & Devaprasad
@@ -568,6 +590,16 @@ class _AWFBase(_FactoringBase):
         if self.cadence == "timestep":
             self._adapt()
         super()._on_begin_instance()
+
+    def inherit(self, other: Technique) -> None:
+        if not isinstance(other, _AWFBase) or other.p != self.p:
+            return
+        self.weights = other.weights.copy()
+        self._sum_time = other._sum_time.copy()
+        self._sum_size = other._sum_size.copy()
+        self._wap_num = other._wap_num.copy()
+        self._wap_den = other._wap_den.copy()
+        self._adapt_k = other._adapt_k
 
 
 @register_technique(paper_set=True)
@@ -668,6 +700,13 @@ class AF(Technique):
         d = per_iter - self._mean[worker]
         self._mean[worker] += d * k / self._cnt[worker]
         self._m2[worker] += k * d * (per_iter - self._mean[worker])
+
+    def inherit(self, other: Technique) -> None:
+        if not isinstance(other, AF) or other.p != self.p:
+            return
+        self._cnt = other._cnt.copy()
+        self._mean = other._mean.copy()
+        self._m2 = other._m2.copy()
 
 
 @register_technique(paper_set=True)

@@ -65,6 +65,11 @@ class DecodeEngine:
         self._tokens = np.zeros((slots, 1), np.int32)
         self._used = [False] * slots
         self._fresh = init_decode_state(cfg, 1, max_len=max_len)
+        # decode steps spent on the slot's current admission chunk — the
+        # throughput measurement fed back to the DLS scheduler so adaptive
+        # techniques (AF/AWF*) see real per-slot service times
+        self._chunk_steps = [0] * slots
+        self._chunk_open = [False] * slots
 
     def _reset_lane(self, s: int) -> None:
         """Splice a fresh single-lane state into lane s: per-lane pos -> 0
@@ -109,7 +114,15 @@ class DecodeEngine:
         for s in range(self.slots):
             if self._active[s] is None:
                 if not self._queue[s]:
-                    self._queue[s] = self.sched.pull(s)
+                    if self._chunk_open[s]:
+                        self.sched.complete(s, elapsed=float(
+                            max(self._chunk_steps[s], 1)))
+                        self._chunk_open[s] = False
+                    chunk = self.sched.pull(s)
+                    if chunk:
+                        self._queue[s] = chunk
+                        self._chunk_open[s] = True
+                        self._chunk_steps[s] = 0
                 if self._queue[s]:
                     req = self._queue[s].pop(0)
                     if self._used[s]:
@@ -136,6 +149,7 @@ class DecodeEngine:
             if req is None:
                 self._tokens[s, 0] = 0
                 continue
+            self._chunk_steps[s] += 1
             if self._prompt_left[s]:
                 # still prefilling: feed the next prompt token
                 self._tokens[s, 0] = self._prompt_left[s].pop(0)

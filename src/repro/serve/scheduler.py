@@ -22,7 +22,6 @@ benchmark (benchmarks/serving_balance.py).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Optional, Union
 
 import numpy as np
@@ -63,30 +62,73 @@ class RequestScheduler:
                             chunk_param=self.chunk_param)
         self._pending: list[Request] = []
         self._tech = None
+        self._plan_gen = 0  # admission-plan generation (a "time-step")
         self._assigned: dict[int, list[Request]] = {
             w: [] for w in range(self.num_workers)}
+        # per-worker outstanding grant awaiting complete()
+        self._outstanding: dict[int, object] = {}
 
     def submit(self, req: Request) -> None:
         self._pending.append(req)
 
+    def _new_tech(self):
+        """Re-plan over the current backlog, carrying adaptive state
+        (AWF/AF weights and telemetry) over from the previous plan.  Each
+        plan is a new execution instance (time-step): begin_instance lets
+        timestep-cadence techniques (plain AWF) fold the inherited
+        telemetry window into their weights."""
+        tech = self.spec.make(n=len(self._pending), p=self.num_workers)
+        if self._tech is not None:
+            tech.inherit(self._tech)
+        self._plan_gen += 1
+        tech.begin_instance(self._plan_gen)
+        return tech
+
     def pull(self, worker: int) -> list[Request]:
-        """A freed worker requests its next chunk of requests."""
+        """A freed worker requests its next chunk of requests.
+
+        Guaranteed to make progress: while the backlog is non-empty this
+        returns at least one request (the admission plan is rebuilt over
+        the refreshed backlog whenever the previous one drains), so an
+        empty result means an empty backlog.  An empty pull does *not*
+        reset the technique: adaptive state survives idle gaps (and keeps
+        receiving late complete() reports) until the next plan inherits
+        it.
+        """
         if not self._pending:
-            self._tech = None
             return []
         if self._tech is None or self._tech.remaining <= 0:
-            self._tech = self.spec.make(
-                n=len(self._pending), p=self.num_workers)
-            self._cursor = 0
+            # also covers the backlog having drained mid-plan: granted
+            # sizes are clamped to the backlog, so an emptied queue
+            # implies remaining <= 0 and the next pull re-plans here
+            self._tech = self._new_tech()
         grant = self._tech.next_chunk(worker)
-        if grant is None:
-            self._tech = None
-            return []
         take = min(grant.size, len(self._pending))
         out = self._pending[:take]
         del self._pending[:take]
         self._assigned[worker].extend(out)
+        self._outstanding[worker] = dataclasses.replace(grant, size=take)
         return out
+
+    def complete(self, worker: int, elapsed: float) -> None:
+        """Report the measured service time of the worker's last chunk.
+
+        This is the path that makes the adaptive techniques adaptive at
+        the serving layer: AF/AWF weighting folds ``elapsed`` (any
+        monotone unit — seconds, decode steps) per granted request into
+        its per-slot throughput estimate, so heterogeneous or degraded
+        replicas get smaller admission chunks on subsequent pulls.
+
+        The measurement feeds the *current* plan's technique: a chunk
+        still in flight when another worker triggered a re-plan would
+        otherwise report into the superseded (already-inherited-from)
+        instance and be lost — adaptive state flows forward, so late
+        completions must too.
+        """
+        grant = self._outstanding.pop(worker, None)
+        if grant is None or self._tech is None:
+            return
+        self._tech.complete_chunk(worker, grant, float(elapsed))
 
     @property
     def backlog(self) -> int:
@@ -110,21 +152,20 @@ def simulate_serving(requests: list[Request], num_workers: int,
         sched.submit(r)
     free_at = np.zeros(num_workers)
     done: list[tuple[Request, float]] = []
-    # all requests pre-arrived (batch regime): workers repeatedly pull
-    active = True
-    while active:
-        active = False
+    # all requests pre-arrived (batch regime): workers repeatedly pull.
+    # pull() drains the backlog to empty (it re-plans internally), so an
+    # empty chunk terminates the loop — no spin on a non-empty backlog.
+    while True:
         w = int(np.argmin(free_at))
         chunk = sched.pull(w)
-        if chunk:
-            active = True
-            t = free_at[w]
-            for r in chunk:
-                t = max(t, r.arrival) + r.cost * speed[w]
-                done.append((r, t))
-            free_at[w] = t
-        elif sched.backlog:
-            active = True
+        if not chunk:
+            break
+        t = free_at[w]
+        for r in chunk:
+            t = max(t, r.arrival) + r.cost * speed[w]
+            done.append((r, t))
+        sched.complete(w, elapsed=t - free_at[w])
+        free_at[w] = t
     lat = np.array([t - r.arrival for r, t in done])
     return dict(
         n=len(done),

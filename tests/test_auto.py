@@ -77,3 +77,30 @@ def test_fiss_viss_increasing_and_valid():
         # increasing until the tail clamp
         body = sizes[: -2 * 8]
         assert all(a <= b for a, b in zip(body, body[1:])), t
+
+
+@pytest.mark.parametrize("policy,explore_steps", [("ucb", 1),
+                                                  ("explore_commit", 2)])
+def test_auto_batch_engine_matches_event(policy, explore_steps):
+    """The batched arm-evaluation path must reproduce the sequential loop
+    exactly: same arm sequence, same per-step t_par, same final stats."""
+    w = sphynx_like(n=8_000)
+    speeds = np.ones(8)
+    speeds[:2] = 1.7
+    kw = dict(chunk_param=4, speeds=speeds, profile=NOISY_PROFILE, seed=5)
+    mk = lambda: AutoSelector(candidates=("static", "gss", "fac2", "awf_b"),
+                              policy=policy, explore_steps=explore_steps)
+    sel_e, hist_e = auto_simulate(w, p=8, timesteps=14, selector=mk(),
+                                  engine="event", **kw)
+    sel_b, hist_b = auto_simulate(w, p=8, timesteps=14, selector=mk(),
+                                  engine="batch", **kw)
+    assert [h["technique"] for h in hist_b] == \
+           [h["technique"] for h in hist_e]
+    assert [h["t_par"] for h in hist_b] == [h["t_par"] for h in hist_e]
+    assert sel_b.summary() == sel_e.summary()
+    assert str(sel_b.best) == str(sel_e.best)
+
+
+def test_auto_batch_engine_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="engine"):
+        auto_simulate(sphynx_like(n=100), p=2, timesteps=1, engine="warp")

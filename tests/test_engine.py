@@ -70,3 +70,27 @@ def test_engine_dls_admission_pulls_chunks(model):
     stats = eng.run()
     assert stats.completed == 6
     assert stats.tokens == 24
+
+
+def test_engine_reports_chunk_service_times(model):
+    """Regression for the adaptivity gap: the engine must report each
+    admission chunk's measured decode-steps back through
+    RequestScheduler.complete, so adaptive techniques see real per-slot
+    service times instead of zero measurements."""
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64, technique="awf_c")
+    completed = []
+    orig = eng.sched.complete
+
+    def spy(worker, elapsed):
+        completed.append((worker, elapsed))
+        orig(worker, elapsed=elapsed)
+
+    eng.sched.complete = spy
+    for i in range(6):
+        eng.submit(_req(i, new=4))
+    stats = eng.run()
+    assert stats.completed == 6
+    assert completed, "no chunk measurements reached the scheduler"
+    assert all(e > 0 for _, e in completed)
+    assert {w for w, _ in completed} <= {0, 1}

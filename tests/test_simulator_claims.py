@@ -173,3 +173,29 @@ def test_perturbation_hits_nonadaptive_harder(sphynx):
                    timesteps=2)[-1].record
     awfc = simulate("awf_c", sphynx, p=P, perturb=perturb, timesteps=2)[-1].record
     assert awfc.t_par < wf2.t_par
+
+
+def test_simulate_seed_is_live(sphynx):
+    """Regression: `simulate(..., seed=k)` used to be silently ignored —
+    RAND always ran its default generator.  Same seed must reproduce the
+    run exactly; different seeds must change the chunk sequence."""
+    a = simulate("rand", sphynx, p=P, seed=7, record_chunks=True)[0].record
+    b = simulate("rand", sphynx, p=P, seed=7, record_chunks=True)[0].record
+    c = simulate("rand", sphynx, p=P, seed=8, record_chunks=True)[0].record
+    assert a.t_par == b.t_par
+    assert [ch.size for ch in a.chunks] == [ch.size for ch in b.chunks]
+    assert [ch.size for ch in a.chunks] != [ch.size for ch in c.chunks]
+
+
+def test_simulate_seed_reaches_stochastic_perturb(sphynx):
+    """A 3-arg perturb(ts, wkr, rng) draws from a Generator seeded by
+    `simulate`'s seed: reproducible per seed, varying across seeds."""
+
+    def perturb(ts, wkr, rng):
+        return 1.0 + 0.5 * rng.random()
+
+    a = simulate("gss", sphynx, p=P, perturb=perturb, seed=3)[0].record
+    b = simulate("gss", sphynx, p=P, perturb=perturb, seed=3)[0].record
+    c = simulate("gss", sphynx, p=P, perturb=perturb, seed=4)[0].record
+    assert a.t_par == b.t_par
+    assert a.t_par != c.t_par

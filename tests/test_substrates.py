@@ -200,6 +200,110 @@ def test_serving_handles_heterogeneous_workers():
     assert ss["makespan"] < static["makespan"]
 
 
+@pytest.mark.parametrize("technique", ["awf", "awf_c"])
+def test_serving_scheduler_feeds_adaptive_techniques(technique):
+    """Regression for the adaptivity gap: `complete(worker, elapsed)` must
+    reach the technique's telemetry path, so AWF slot weights move under
+    heterogeneous slot throughput (slow slot -> weight < 1 -> smaller
+    admission chunks).  Plain AWF adapts at time-step boundaries, which
+    at the serving layer are plan re-builds — each `_new_tech` is a new
+    execution instance."""
+    from repro.serve.scheduler import RequestScheduler
+
+    p = 4
+    sched = RequestScheduler(num_workers=p, technique=technique,
+                             chunk_param=1)
+    all_reqs = _mk_requests(n=600, seed=3)
+    # arrivals land in waves, so the plan drains and rebuilds repeatedly
+    # (plain AWF only adapts at those time-step boundaries)
+    waves = [all_reqs[i:i + 100] for i in range(0, 600, 100)]
+    slow = 0
+    w = 0
+    while sched.backlog or waves:
+        if not sched.backlog:
+            for r in waves.pop(0):
+                sched.submit(r)
+            continue
+        chunk = sched.pull(w)
+        assert chunk, "pull returned empty with a non-empty backlog"
+        # slow slot takes 4x per request; elapsed is what DecodeEngine
+        # would report (decode steps spent on the admission chunk)
+        sched.complete(w, elapsed=len(chunk) * (4.0 if w == slow else 1.0))
+        w = (w + 1) % p
+    weights = sched._tech.weights
+    fast = [i for i in range(p) if i != slow]
+    assert weights[slow] < min(weights[i] for i in fast)
+    # the learned weighting shows up as less admitted work for the slow
+    # slot over the run (equal pull counts, smaller chunks per pull)
+    totals = {i: len(sched._assigned[i]) for i in range(p)}
+    assert totals[slow] < min(totals[i] for i in fast)
+
+
+def test_serving_adaptive_state_survives_replans():
+    """The admission plan is rebuilt over the refreshed backlog whenever it
+    drains; adaptive telemetry must carry over (Technique.inherit) instead
+    of restarting cold on every re-plan."""
+    from repro.serve.scheduler import RequestScheduler
+
+    sched = RequestScheduler(num_workers=2, technique="awf_c",
+                             chunk_param=1)
+    first, second = _mk_requests(n=80, seed=1)[:40], \
+        _mk_requests(n=80, seed=1)[40:]
+    for r in first:
+        sched.submit(r)
+    planned = []
+    w = 0
+    while sched.backlog:
+        chunk = sched.pull(w)
+        if sched._tech not in planned:
+            planned.append(sched._tech)
+        sched.complete(w, elapsed=len(chunk) * (3.0 if w == 0 else 1.0))
+        w = 1 - w
+        if second:  # late arrivals: force the plan to drain mid-stream
+            for r in second:
+                sched.submit(r)
+            second = []
+    assert len(planned) > 1, "scenario must exercise at least one re-plan"
+    last = planned[-1]
+    assert last._adapt_k > 0 and last.weights[0] < last.weights[1]
+
+
+def test_serving_adaptive_state_survives_idle_gap():
+    """An empty pull (idle queue) must not reset adaptation: the learned
+    weights keep receiving late complete() reports and are inherited by
+    the first plan built over the next arrival wave."""
+    from repro.serve.scheduler import RequestScheduler
+
+    sched = RequestScheduler(num_workers=2, technique="awf_c",
+                             chunk_param=1)
+    for r in _mk_requests(n=40, seed=2):
+        sched.submit(r)
+    w = 0
+    while sched.backlog:
+        chunk = sched.pull(w)
+        sched.complete(w, elapsed=len(chunk) * (5.0 if w == 0 else 1.0))
+        w = 1 - w
+    assert sched.pull(0) == []  # idle gap
+    learned = sched._tech.weights.copy()
+    assert learned[0] < learned[1]
+    for r in _mk_requests(n=40, seed=9):
+        sched.submit(r)
+    sched.pull(1)  # new wave: first plan inherits the learned weights
+    np.testing.assert_array_equal(sched._tech.weights, learned)
+
+
+def test_serving_completes_all_requests_with_adaptive_technique():
+    """simulate_serving terminates (no spin when a plan drains mid-cycle)
+    and serves every request, with the complete() feedback path active."""
+    reqs = _mk_requests(n=300, seed=5)
+    speed = np.ones(8)
+    speed[0] = 4.0
+    for tech in ("awf_c", "af", "maf"):
+        r = simulate_serving(reqs, num_workers=8, technique=tech,
+                             worker_speed=speed)
+        assert r["n"] == len(reqs), tech
+
+
 # -- balance -------------------------------------------------------------------
 
 
