@@ -1,0 +1,191 @@
+"""Kernel tile scheduling: DLS techniques vs static grid order.
+
+Evaluates `repro.core.jax_sched.plan_tiles_for_kernel` — the tile-to-
+grid-step planner behind the schedule-aware Pallas kernels — on the two
+workload shapes the kernels actually see:
+
+  * skewed expert histograms (grouped matmul): tokens-per-expert drawn
+    from Zipf-like and one-hot-expert distributions, tile cost = live MXU
+    rows per tile;
+  * ragged KV lengths (flash-attention decode / causal prefill): per-lane
+    valid-KV block counts from mixed-length continuous-batching lanes and
+    the causal triangle.
+
+For every registry technique the cost model reports the slowest core's
+span (t_par), c.o.v. and percent imbalance over the P core shares, and
+the scheduling-round count — with a per-chunk overhead charge so
+fine-grained techniques pay for their rounds (the paper's granularity /
+overhead tradeoff at kernel scale).  A small interpret-mode numerical
+check confirms the planned grouped matmul matches the identity order.
+
+Writes benchmarks/results/kernel_sched.json.
+
+    PYTHONPATH=src python -m benchmarks.kernel_sched_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import REGISTRY, plan_tiles_for_kernel
+
+from .common import RESULTS
+
+#: per-scheduling-round overhead in tile-cost units (one tile row == 1.0);
+#: scaled per technique by its registry o_cs.  Roughly "one chunk
+#: calculation costs a few MXU rows" — small enough that balance wins,
+#: large enough that SS's one-tile chunks are not free.
+OVERHEAD_PER_CHUNK = 2.0
+
+
+def _expert_tiles(rows: np.ndarray, block_rows: int) -> np.ndarray:
+    """Per-live-tile costs for a (E,) rows histogram (partial tail tiles)."""
+    costs = []
+    for r in rows.astype(int):
+        for j in range(int(np.ceil(r / block_rows))):
+            costs.append(min(block_rows, r - j * block_rows))
+    return np.asarray(costs, dtype=np.float64)
+
+
+def _causal_kv_costs(lens: np.ndarray, block_q: int, block_k: int,
+                     s: int) -> np.ndarray:
+    """Per-(lane, q block) live-KV costs — the kernel's own cost model
+    (`flash_kv_group_costs`), so the bench cannot drift from what
+    `flash_attention_sched_bhsd` actually plans."""
+    from repro.kernels.flash_attention.flash_attention import (
+        flash_kv_group_costs,
+    )
+
+    _, costs, _ = flash_kv_group_costs(lens.shape[0], s, block_q, block_k,
+                                       causal=True, kv_lens=lens)
+    return costs
+
+
+def scenarios(quick: bool = False) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(7)
+    e = 16 if quick else 64
+    block = 128
+    zipf = np.minimum(rng.zipf(1.3, e) * 16, 16 * block).astype(float)
+    hot = np.full(e, 64.0)
+    hot[: max(e // 16, 1)] = 16 * block        # a few hot experts
+    lanes = 8 if quick else 32
+    s = 2048 if quick else 8192
+    ragged = rng.integers(64, s, lanes)
+    ragged[0] = s                              # one full-context lane
+    return {
+        "skewed_experts_zipf": _expert_tiles(zipf, block),
+        "skewed_experts_hot": _expert_tiles(hot, block),
+        "ragged_kv_decode": np.maximum(np.ceil(ragged / block), 1.0),
+        "causal_prefill_kv": _causal_kv_costs(
+            ragged, block_q=256, block_k=256, s=s),
+        "uniform_control": np.full(e * 4, float(block)),
+    }
+
+
+def run(p: int = 8, quick: bool = False) -> dict:
+    techs = list(REGISTRY)
+    out: dict = dict(
+        name="kernel_sched",
+        p=p,
+        overhead_per_chunk=OVERHEAD_PER_CHUNK,
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        scenarios={},
+    )
+    dls_beats_static = []
+    for name, costs in scenarios(quick=quick).items():
+        rows = {}
+        for t in techs:
+            plan = plan_tiles_for_kernel(
+                costs, p=p, technique=t,
+                overhead_per_chunk=OVERHEAD_PER_CHUNK)
+            rows[t] = dict(
+                t_par=round(plan.t_par, 2),
+                cov=round(plan.cov, 4),
+                percent_imbalance=round(plan.percent_imbalance, 2),
+                n_chunks=plan.n_chunks,
+                sched_time=round(plan.sched_time, 2),
+            )
+        static_t = rows["static"]["t_par"]
+        best = min(rows, key=lambda t: rows[t]["t_par"])
+        out["scenarios"][name] = dict(
+            tiles=int(costs.size),
+            total_cost=float(costs.sum()),
+            techniques=rows,
+            static_t_par=static_t,
+            best_technique=best,
+            best_t_par=rows[best]["t_par"],
+            speedup_vs_static=round(static_t / max(rows[best]["t_par"],
+                                                   1e-12), 3),
+        )
+        if "uniform" not in name and best != "static":
+            dls_beats_static.append(name)
+    out["dls_beats_static_on"] = dls_beats_static
+    return out
+
+
+def check_numerics(quick: bool = True) -> int:
+    """Interpret-mode sanity: planned grouped matmul == identity order."""
+    import jax.numpy as jnp
+
+    from repro.kernels.grouped_matmul.ops import grouped_matmul
+
+    rng = np.random.default_rng(0)
+    e, c, d, f, bm = 4, 32, 32, 32, 8
+    xe = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    rows = np.array([32, 8, 16, 24])
+    plain = np.asarray(grouped_matmul(xe, w, block_rows=bm, interpret=True))
+    mismatches = 0
+    for t in ("static", "ss", "fac2") if quick else list(REGISTRY):
+        planned = np.asarray(grouped_matmul(
+            xe, w, block_rows=bm, interpret=True, schedule=t,
+            expert_rows=rows))
+        mismatches += int(not np.array_equal(planned, plain))
+    return mismatches
+
+
+def rows(p: int = 8) -> list[dict]:
+    """benchmarks.run entry point."""
+    r = run(p=p, quick=True)
+    flat = []
+    for name, sc in r["scenarios"].items():
+        flat.append(dict(name=f"kernel_sched/{name}",
+                         static_t_par=sc["static_t_par"],
+                         best_technique=sc["best_technique"],
+                         best_t_par=sc["best_t_par"],
+                         speedup_vs_static=sc["speedup_vs_static"]))
+    return flat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small scenarios + quick numerics (CI)")
+    ap.add_argument("--p", type=int, default=8,
+                    help="notional core count the grid splits across")
+    args = ap.parse_args()
+    result = run(p=args.p, quick=args.quick)
+    result["numerics_mismatches"] = check_numerics(quick=args.quick)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "kernel_sched.json"
+    out.write_text(json.dumps(result, indent=1))
+    for name, sc in result["scenarios"].items():
+        print(f"{name:22s} static={sc['static_t_par']:>10.1f}  "
+              f"best={sc['best_technique']:>6s} {sc['best_t_par']:>10.1f}  "
+              f"({sc['speedup_vs_static']:.2f}x)")
+    if result["numerics_mismatches"]:
+        raise SystemExit("planned kernel output diverged from identity order")
+    if not result["dls_beats_static_on"]:
+        raise SystemExit("no skewed scenario where a DLS technique beats "
+                         "static tile order — cost model regression")
+
+
+if __name__ == "__main__":
+    main()

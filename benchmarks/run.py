@@ -11,7 +11,7 @@ import argparse
 import sys
 import time
 
-from . import batch_bench, framework_bench, paper_campaign
+from . import batch_bench, framework_bench, kernel_sched_bench, paper_campaign
 from .common import emit
 
 
@@ -40,6 +40,7 @@ def main() -> None:
         "packing": framework_bench.packing,
         "batch_speedup": lambda: batch_bench.rows(
             n=n_small, reps=3 if args.fast else 10),
+        "kernel_sched": kernel_sched_bench.rows,
     }
     # roofline needs dry-run artifacts; include when present
     try:

@@ -1,6 +1,8 @@
 """MoE load-balancing demo: the paper's AWF technique as an
 auxiliary-loss-free expert balancer (router-bias integral control), plus
-the DLS-planned grouped-matmul tile schedule.
+the schedule-aware grouped-matmul kernel — the balancer's ScheduleSpec
+flows down into the Pallas tile plan and the kernel telemetry flows back
+as LoopInstanceRecords.
 
     PYTHONPATH=src python examples/moe_balance_demo.py
 """
@@ -11,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.balance.moe import MoEBalancer, plan_tiles
+from repro.balance.moe import MoEBalancer
 from repro.configs import ARCHS, smoke_config
 from repro.kernels.grouped_matmul.ops import grouped_matmul
 from repro.models.moe import _route, init_moe
@@ -31,7 +33,8 @@ def main():
                                  (4, 64, cfg.d_model))
         return base + 1.5 * hot
 
-    bal = MoEBalancer(num_experts=e, bias_strength=0.05)
+    bal = MoEBalancer(num_experts=e, bias_strength=0.05,
+                      kernel_schedule="fac2")
     p = dict(params)
     p["router_bias"] = jnp.zeros((e,), jnp.float32)
     print("step  peak/mean load (1.0 = perfectly balanced)")
@@ -40,16 +43,28 @@ def main():
         print(f"{step:4d}  {load.max()/load.mean():.3f}")
         p["router_bias"] = jnp.asarray(bal.update(load), jnp.float32)
 
-    # DLS tile plan for the ragged expert loads -> grouped matmul kernel
+    # the balancer passes its kernel spec + the measured ragged loads down
+    # to the grouped-matmul tile planner, and records the plan telemetry
     rows = np.asarray(load / load.sum() * 256, dtype=int)
-    order = plan_tiles(rows, block_rows=8, p=8)
-    xe = jnp.ones((e, max(8, int(np.ceil(rows.max() / 8)) * 8), cfg.d_model),
-                  jnp.float32)
+    cap = max(8, int(np.ceil(rows.max() / 8)) * 8)
+    order, ktp = bal.plan_kernel_tiles(rows, block_rows=8, p=8,
+                                       capacity_rows=cap)
+    print(f"\nDLS tile plan ({ktp.spec}): {len(order)} tiles over {e} "
+          f"experts (ragged loads {rows.min()}..{rows.max()} rows), "
+          f"{ktp.n_chunks} chunks, kernel p.i. {ktp.percent_imbalance:.1f}%")
+    xe = jnp.ones((e, cap, cfg.d_model), jnp.float32)
     w = jnp.ones((e, cfg.d_model, cfg.moe.d_ff), jnp.float32)
-    print(f"\nDLS tile plan: {len(order)} tiles over {e} experts "
-          f"(ragged loads {rows.min()}..{rows.max()} rows)")
-    out = grouped_matmul(xe, w, block_rows=8, interpret=True)
-    print(f"grouped matmul out: {out.shape} (Pallas kernel, interpret mode)")
+    out = grouped_matmul(xe, w, tile_order=jnp.asarray(order), block_rows=8,
+                         interpret=True)
+    # ...or let the kernel wrapper plan for itself from the same spec:
+    out2 = grouped_matmul(xe, w, block_rows=8, interpret=True,
+                          schedule=bal.kernel_spec, expert_rows=rows,
+                          recorder=bal.kernel_recorder)
+    assert np.array_equal(np.asarray(out), np.asarray(out2))
+    rec = bal.kernel_recorder.records[-1]
+    print(f"grouped matmul out: {out.shape} (Pallas kernel, interpret "
+          f"mode); telemetry: {len(bal.kernel_recorder.records)} kernel "
+          f"records, last cov={rec.cov:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,9 @@
 
 Runs the shared-queue simulator on an irregular loop with every
 registered technique, prints the paper's metrics (T_par, c.o.v., p.i.),
-then shows the SPMD side: an in-graph (jit) chunk plan and an AWF weight
-update.
+then shows the SPMD side: an in-graph (jit) chunk plan, an AWF weight
+update, and the kernel tile planner that drives the schedule-aware
+Pallas kernels (see docs/architecture.md).
 
 Technique selection goes through the unified ScheduleSpec interface —
 try ``LB_SCHEDULE=gss,64 PYTHONPATH=src python examples/quickstart.py``
@@ -17,7 +18,7 @@ import numpy as np
 
 from repro.core import (
     TECHNIQUES, ScheduleSpec, resolve, simulate, sphynx_like, LoopRecorder,
-    best_combination,
+    best_combination, plan_tiles_for_kernel,
 )
 from repro.core.jax_sched import plan_chunks, awf_update
 
@@ -57,6 +58,20 @@ def main():
         weights, wnum, wden, k = awf_update(wnum, wden, k, times, sizes_done)
     print(f"AWF weights after 3 steps: {np.round(np.asarray(weights), 3)} "
           f"(slow worker gets less work)")
+
+    # --- 3. the kernels: DLS tile assignment for a Pallas grid ------------
+    # skewed per-tile costs (a hot expert / a long decode lane); the plan
+    # splits the sequential grid across 8 cores with near-equal work
+    costs = np.r_[np.full(8, 64.0), np.full(56, 8.0)]    # 8 hot tiles
+    print(f"\nkernel tile plan ({costs.size} tiles, 8 cores):")
+    print(f"{'technique':8s} {'t_par':>7s} {'c.o.v.':>8s} {'p.i.%':>7s} {'chunks':>7s}")
+    for t in ("static", "ss", "fac2"):
+        ktp = plan_tiles_for_kernel(costs, p=8, technique=t,
+                                    overhead_per_chunk=2.0)
+        print(f"{t:8s} {ktp.t_par:7.1f} {ktp.cov:8.4f} "
+              f"{ktp.percent_imbalance:7.2f} {ktp.n_chunks:7d}")
+    print("(the same plan feeds grouped_matmul(schedule=...) and "
+          "flash_attention(schedule=...) — see README §Kernel scheduling)")
 
 
 if __name__ == "__main__":

@@ -18,10 +18,12 @@ Two host-side mechanisms, both driven by `repro.core` chunk calculus:
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from ..core.jax_sched import KernelTilePlan, plan_tiles_for_kernel
+from ..core.metrics import LoopRecorder
 from ..core.schedule import ScheduleSpec, resolve
 
 __all__ = ["MoEBalancer", "plan_tiles"]
@@ -45,6 +47,10 @@ class MoEBalancer:
     bias_strength: float = 1e-2
     recency: bool = True
     schedule: Union[ScheduleSpec, str] = "awf"
+    #: technique the balancer hands down to the grouped-matmul tile
+    #: planner (``plan_kernel_tiles``) — the kernel-level half of the
+    #: balancing loop; any registry technique.
+    kernel_schedule: Union[ScheduleSpec, str] = "fac2"
 
     def __post_init__(self):
         self.spec = resolve(self.schedule, default="awf")
@@ -52,6 +58,8 @@ class MoEBalancer:
             raise ValueError(
                 f"MoEBalancer needs an adaptive technique, got "
                 f"{self.spec.technique!r} (adaptive=False)")
+        self.kernel_spec = resolve(self.kernel_schedule, default="fac2")
+        self.kernel_recorder = LoopRecorder()
         self._wap_num = np.zeros(self.num_experts)
         self._wap_den = np.zeros(self.num_experts)
         self._k = 0
@@ -82,44 +90,73 @@ class MoEBalancer:
         self.bias = self.bias + self.bias_strength * (self.weights - 1.0)
         return self.bias
 
+    def plan_kernel_tiles(self, expert_rows: np.ndarray, block_rows: int,
+                          p: int = 8, *,
+                          capacity_rows: Optional[int] = None,
+                          worker_weights: Optional[Sequence[float]] = None,
+                          ) -> tuple[np.ndarray, KernelTilePlan]:
+        """Pass the balancer's spec down to the grouped-matmul kernel.
+
+        Plans the tile order for the measured per-expert loads with
+        ``kernel_schedule`` and records the plan's telemetry
+        (LoopInstanceRecord) into ``kernel_recorder`` — the kernel-level
+        counterpart of ``update``'s router telemetry.  ``worker_weights``
+        (per-core speeds, (p,)) bias the chunk assignment like AWF worker
+        weights; expert skew is already carried by ``expert_rows``.
+        """
+        order, plan = plan_tiles(
+            expert_rows, block_rows, p=p, technique=self.kernel_spec,
+            capacity_rows=capacity_rows, weights=worker_weights,
+            return_plan=True)
+        self.kernel_recorder.add(plan.to_record(
+            "grouped_matmul",
+            instance=self.kernel_recorder.next_instance("grouped_matmul")))
+        return order, plan
+
 
 def plan_tiles(expert_rows: np.ndarray, block_rows: int, p: int = 8,
-               technique: Union[ScheduleSpec, str] = "fac2") -> np.ndarray:
+               technique: Union[ScheduleSpec, str] = "fac2", *,
+               capacity_rows: Optional[int] = None,
+               weights: Optional[Sequence[float]] = None,
+               assign: str = "greedy",
+               overhead_per_chunk: float = 0.0,
+               return_plan: bool = False):
     """Order expert row-tiles so a P-way sequential split balances work.
 
     expert_rows: (E,) number of *live* rows per expert (ragged loads).
     Returns a permutation of tile ids for the capacity layout
-    (tile id = e * tiles_per_expert + j), live tiles first, ordered by DLS
-    chunking of the ragged backlog, dead (all-padding) tiles last.
+    (tile id = e * tiles_per_expert + j), live tiles first, ordered by the
+    DLS chunk calculus over the ragged backlog
+    (:func:`repro.core.jax_sched.plan_tiles_for_kernel` — each live tile
+    costs its live rows; the last tile of an expert may be partial), dead
+    (all-padding) tiles last.
+
+    ``capacity_rows`` fixes the capacity layout's rows-per-expert (the C
+    of the (E, C, d) buffer); when omitted it is inferred from
+    ``expert_rows.max()``.  ``weights``/``assign``/``overhead_per_chunk``
+    pass through to the kernel tile planner.  With ``return_plan=True``
+    the :class:`~repro.core.jax_sched.KernelTilePlan` (cost-model
+    telemetry over the *live* tiles) is returned alongside the order.
     """
     expert_rows = np.asarray(expert_rows)
     e = expert_rows.shape[0]
-    tiles_per_e = None
-    # tiles per expert in the capacity layout must be uniform; caller
-    # passes rows <= capacity. We infer capacity tiles from max.
-    cap_tiles = int(np.ceil(expert_rows.max() / block_rows)) if expert_rows.size else 0
+    cap_src = capacity_rows if capacity_rows is not None else (
+        int(expert_rows.max()) if expert_rows.size else 0)
+    cap_tiles = int(np.ceil(cap_src / block_rows)) if e else 0
 
-    def live_tiles(rows):
-        return int(np.ceil(rows / block_rows))
+    tile_ids: list[int] = []
+    tile_cost: list[int] = []
+    for ei in range(e):
+        rows = int(min(expert_rows[ei], cap_src))
+        for j in range(int(np.ceil(rows / block_rows))):
+            tile_ids.append(ei * cap_tiles + j)
+            tile_cost.append(min(block_rows, rows - j * block_rows))
 
-    live = [(ei, j) for ei in range(e) for j in range(live_tiles(expert_rows[ei]))]
-    # DLS ordering: schedule the live tiles as 'iterations' with FAC2 so
-    # consecutive chunks mix experts with long backlogs first (LPT-flavor)
-    order = sorted(range(len(live)),
-                   key=lambda t: (-expert_rows[live[t][0]], live[t][1]))
-    n = len(order)
-    if n > 1:
-        tech = resolve(technique).make(n=n, p=p)
-        sched: list[int] = []
-        pos = 0
-        while True:
-            grant = tech.next_chunk(pos % p)
-            if grant is None:
-                break
-            sched.extend(order[grant.start:grant.start + grant.size])
-            pos += 1
-        order = sched
-    live_ids = [live[t][0] * cap_tiles + live[t][1] for t in order]
-    all_ids = set(range(e * cap_tiles))
-    dead = sorted(all_ids - set(live_ids))
-    return np.asarray(live_ids + dead, dtype=np.int32)
+    plan = plan_tiles_for_kernel(tile_cost, p=p, technique=technique,
+                                 weights=weights, assign=assign,
+                                 overhead_per_chunk=overhead_per_chunk)
+    ids = np.asarray(tile_ids, np.int64)
+    live_ids = ids[plan.order] if ids.size else ids
+    dead = sorted(set(range(e * cap_tiles)) - set(live_ids.tolist()))
+    order = np.asarray(list(live_ids) + dead, dtype=np.int32)
+    return (order, plan) if return_plan else order

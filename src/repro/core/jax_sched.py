@@ -18,6 +18,12 @@ Provided here:
     chunk rule as jnp functions.
   * balanced_assignment(...) -> DLS-planned partition of ragged work among
     workers (used by the MoE balancer and the grouped-matmul work lists).
+  * plan_tiles_for_kernel(...) -> KernelTilePlan: the kernel-facing entry
+    point — tile-to-grid-step assignment for the Pallas kernels
+    (grouped matmul expert tiles, flash-attention q-block groups) produced
+    by the same chunk calculus, with a cost model and per-core telemetry
+    (LoopInstanceRecord) so kernel launches feed cov / percent_imbalance
+    and the AutoSelector exactly like simulated loops do.
 
 Agreement with the reference implementations in `core/techniques.py` is
 property-tested in tests/test_jax_sched.py.
@@ -28,12 +34,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .metrics import LoopInstanceRecord
 from .schedule import REGISTRY, ScheduleSpec, bind_graph_form, resolve
 
 __all__ = [
@@ -46,6 +53,8 @@ __all__ = [
     "af_update",
     "af_chunk",
     "balanced_assignment",
+    "KernelTilePlan",
+    "plan_tiles_for_kernel",
 ]
 
 
@@ -449,3 +458,165 @@ def balanced_assignment(costs: jnp.ndarray, p: int,
     _, assign_sorted = jax.lax.scan(body, jnp.zeros((p,), costs.dtype), order)
     out = jnp.zeros((n,), jnp.int32)
     return out.at[order].set(assign_sorted.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel tile scheduling — DLS chunk calculus applied to Pallas grid steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTilePlan:
+    """A DLS-planned tile-to-grid-step assignment for a Pallas kernel.
+
+    The TPU grid executes sequentially per core; when a launch is split
+    across ``p`` cores (megacore / multi-chip shards) each core runs a
+    contiguous span of grid steps.  ``order`` is laid out so that the
+    per-core spans are exactly the per-worker tile lists the chunk
+    calculus produced — core ``w`` owns the steps where
+    ``step_worker == w`` (a contiguous run, workers in ascending order).
+
+    ``worker_cost`` is the cost model's estimate of each core's span
+    (compute cost of its tiles + per-chunk scheduling overhead), the
+    kernel-level analogue of per-thread finish times — ``to_record()``
+    turns it into a :class:`~repro.core.metrics.LoopInstanceRecord` so
+    kernel launches feed the same cov / percent_imbalance metrics and
+    AutoSelector telemetry as simulated loops.
+    """
+
+    spec: ScheduleSpec
+    p: int
+    n: int                    # live tiles planned
+    order: np.ndarray         # (n,) int32: tile id per grid step
+    step_worker: np.ndarray   # (n,) int32: core owning each grid step
+    step_cost: np.ndarray     # (n,) float64: estimated cost per grid step
+    worker_cost: np.ndarray   # (p,) float64: estimated cost per core span
+    n_chunks: int             # scheduling rounds (o_sr)
+    sched_time: float         # total per-chunk overhead across cores
+
+    @property
+    def t_par(self) -> float:
+        """Cost-model parallel time: the slowest core's span."""
+        return float(self.worker_cost.max(initial=0.0))
+
+    @property
+    def cov(self) -> float:
+        from .metrics import cov
+        return cov(self.worker_cost)
+
+    @property
+    def percent_imbalance(self) -> float:
+        from .metrics import percent_imbalance
+        return percent_imbalance(self.worker_cost, self.t_par)
+
+    def shares(self) -> list[np.ndarray]:
+        """Per-core contiguous spans of ``order`` (what each core runs)."""
+        return [self.order[self.step_worker == w] for w in range(self.p)]
+
+    def to_record(self, loop: str, instance: int = 0) -> LoopInstanceRecord:
+        """Kernel-level telemetry in the KMP_TIME_LOOPS unit of record."""
+        return LoopInstanceRecord(
+            loop=loop, technique=self.spec.technique, instance=instance,
+            p=self.p, n=self.n, chunk_param=self.spec.chunk_param,
+            t_par=self.t_par,
+            thread_times=self.worker_cost.copy(),
+            thread_finish=self.worker_cost.copy(),
+            n_chunks=self.n_chunks, sched_time=self.sched_time)
+
+
+def plan_tiles_for_kernel(
+    costs: Sequence[float],
+    p: int = 8,
+    technique: Union[ScheduleSpec, str, None] = "fac2",
+    *,
+    weights: Optional[Sequence[float]] = None,
+    assign: str = "greedy",
+    overhead_per_chunk: float = 0.0,
+    cost_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> KernelTilePlan:
+    """Plan the tile order of a Pallas kernel launch with DLS chunking.
+
+    ``costs`` gives the estimated execution cost of each kernel tile
+    (live MXU rows for grouped matmul, live KV columns for a
+    flash-attention q block).  Tiles are sorted by decreasing cost (the
+    LPT preconditioning the factoring family assumes), the sorted list is
+    chunked by the technique's calculus (``plan_schedule`` over ``n =
+    len(costs)`` iterations), and each chunk is assigned to one of ``p``
+    notional cores:
+
+      * ``assign="greedy"`` (default) — cost-weighted least-finish-time,
+        optionally scaled by per-core ``weights`` (feed AWF weights from
+        :class:`~repro.balance.moe.MoEBalancer` here to bias slow cores
+        down, the adaptive hook);
+      * ``assign="round_robin"`` — chunk i to core i % p, the canonical
+        SPMD order (matches ``plan_schedule``'s request order exactly).
+
+    ``overhead_per_chunk`` is the cost model's per-scheduling-round
+    overhead in cost units, scaled by the technique's relative
+    chunk-calculation cost ``o_cs`` — it charges fine-grained techniques
+    (SS) for their many rounds, reproducing the paper's
+    granularity-vs-overhead tradeoff at kernel scale.  ``cost_fn`` maps
+    raw costs to effective costs (e.g. a roofline model turning rows into
+    cycles) before planning.
+
+    Returns a :class:`KernelTilePlan`; ``order`` is a permutation of
+    ``range(len(costs))`` — callers append dead/padding tiles themselves
+    (see ``repro.balance.moe.plan_tiles``).
+    """
+    from .planner import plan_schedule  # deferred: jax_sched has no other
+    # dependency on the host reference classes
+
+    if assign not in ("greedy", "round_robin"):
+        raise ValueError(
+            f"assign must be 'greedy' or 'round_robin', got {assign!r}")
+    spec = resolve(technique, default="fac2")
+    costs = np.asarray(costs, dtype=np.float64)
+    if cost_fn is not None:
+        costs = np.asarray(cost_fn(costs), dtype=np.float64)
+    if costs.ndim != 1:
+        raise ValueError(f"costs must be 1-D, got shape {costs.shape}")
+    n = costs.shape[0]
+    if n == 0:
+        z = np.zeros(0, np.int32)
+        return KernelTilePlan(spec=spec, p=p, n=0, order=z, step_worker=z,
+                              step_cost=np.zeros(0), n_chunks=0,
+                              worker_cost=np.zeros(p), sched_time=0.0)
+    if weights is None:
+        w = np.ones(p, dtype=np.float64)
+    else:
+        w = np.asarray(weights, dtype=np.float64)
+        if w.shape != (p,):
+            raise ValueError(f"weights must have shape ({p},), got {w.shape}")
+        if not np.isfinite(w).all() or w.sum() <= 0:
+            raise ValueError(
+                f"weights must be finite with a positive sum, got {w} — "
+                f"an all-zero AWF warm-up should pass weights=None instead")
+        w = np.maximum(w * (p / w.sum()), 1e-6)
+
+    by_cost = np.argsort(-costs, kind="stable")       # tile ids, LPT order
+    plan = plan_schedule(spec, n=n, p=p)
+    o_cs = spec.meta.o_cs * overhead_per_chunk
+
+    # chunk -> core assignment
+    loads = np.zeros(p, dtype=np.float64)
+    wtiles: list[list[np.ndarray]] = [[] for _ in range(p)]
+    csum = np.concatenate([[0.0], np.cumsum(costs[by_cost])])
+    for c in plan.chunks:
+        chunk_cost = csum[c.start + c.size] - csum[c.start] + o_cs
+        if assign == "round_robin":
+            tgt = c.worker
+        else:
+            tgt = int(np.argmin((loads + chunk_cost) / w))
+        loads[tgt] += chunk_cost
+        wtiles[tgt].append(by_cost[c.start:c.start + c.size])
+
+    order = np.concatenate(
+        [np.concatenate(t) if t else np.zeros(0, np.int64) for t in wtiles]
+    ).astype(np.int32)
+    step_worker = np.concatenate(
+        [np.full(sum(map(len, t)), wkr, np.int32)
+         for wkr, t in enumerate(wtiles)])
+    return KernelTilePlan(
+        spec=spec, p=p, n=n, order=order, step_worker=step_worker,
+        step_cost=costs[order], worker_cost=loads,
+        n_chunks=plan.n_chunks, sched_time=o_cs * plan.n_chunks)

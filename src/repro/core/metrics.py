@@ -25,8 +25,15 @@ __all__ = [
 
 
 def cov(thread_times: Sequence[float]) -> float:
-    """Coefficient of variation of per-thread execution times."""
+    """Coefficient of variation of per-thread execution times.
+
+    Degenerate inputs are defined as perfectly balanced: an empty or
+    single-thread measurement (and a zero/negative mean) returns 0.0
+    rather than propagating NaN into the Table-1 summaries.
+    """
     t = np.asarray(thread_times, dtype=np.float64)
+    if t.size == 0:
+        return 0.0
     m = t.mean()
     if m <= 0:
         return 0.0
@@ -104,6 +111,12 @@ class LoopRecorder:
         if not self.print_chunks:
             record = dataclasses.replace(record, chunks=None)
         self.records.append(record)
+
+    def next_instance(self, loop: str) -> int:
+        """The next execution-instance index for ``loop`` — producers that
+        emit records across call sites (kernel wrappers, balancers) use
+        this so per-loop instance ids stay monotone in one recorder."""
+        return sum(r.loop == loop for r in self.records)
 
     def by_technique(self) -> dict[str, list[LoopInstanceRecord]]:
         out: dict[str, list[LoopInstanceRecord]] = {}

@@ -88,6 +88,11 @@ class TechniqueSpec:
     sync: str  # "none" | "atomic" | "mutex"
     o_cs: float  # relative chunk-calculation cost (1.0 == one FLOP-ish op)
     worker_dependent: bool = False
+    #: ``chunk_param`` is the *exact* chunk size (static/ss family) rather
+    #: than the lower-bound threshold every other technique treats it as
+    #: (paper Sec. 3, "Significance of chunk parameter").  Consumed by the
+    #: docs generator so the reference reads this off the registry.
+    chunk_exact: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -426,3 +431,157 @@ def resolve(spec: "ScheduleSpec | str | None", *,
     if chunk_param is not None:
         out = out.with_chunk_param(chunk_param)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Documentation generator — `python -m repro.core.schedule --doc`
+# ---------------------------------------------------------------------------
+
+_DOC_MARKER = ("<!-- AUTO-GENERATED by `python -m repro.core.schedule --doc "
+               "--out docs/techniques.md` — DO NOT EDIT. CI regenerates this "
+               "file and fails on any diff (docs-sync). -->")
+
+
+def _planning_form(entry: TechniqueEntry) -> str:
+    g = entry.graph
+    if g is None:
+        return "host band"
+    if g.builder is not None:
+        return "in-graph (array builder)"
+    return ("in-graph (while-loop, batched)" if g.batched
+            else "in-graph (while-loop)")
+
+
+def _chunk_param_semantics(entry: TechniqueEntry) -> str:
+    # paper Sec. 3, "Significance of chunk parameter" — read off the
+    # registry metadata (TechniqueSpec.chunk_exact), never a name list
+    return "exact chunk size" if entry.meta.chunk_exact else "lower bound"
+
+
+def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
+    """Render the technique reference from the live registry.
+
+    Every cell is read off :class:`TechniqueEntry` (host class, graph
+    form, :class:`TechniqueSpec` metadata), so the document cannot drift
+    from the portfolio — CI regenerates it and fails on any diff.
+    """
+    entries = [registry[n] for n in registry]
+    paper = [e.name for e in entries if e.paper_set]
+    graph = [e.name for e in entries if e.graph is not None]
+    adaptive = [e.name for e in entries if e.meta.adaptive]
+    lines = [
+        "# Technique reference",
+        "",
+        _DOC_MARKER,
+        "",
+        f"{len(entries)} registered techniques "
+        f"({len(paper)} in the paper's LB4OMP set, {len(adaptive)} "
+        f"adaptive, {len(graph)} with an in-graph closed form).  Rows are "
+        "in registration order — the portfolio order the paper tables "
+        "use.  Aliases: "
+        + ", ".join(f"`{a}` -> `{t}`" for a, t in sorted(_ALIASES.items()))
+        + ".",
+        "",
+        "| technique | host class | planning form | `chunk_param` | "
+        "adaptive | profiling | sync | o_cs | worker-dep | paper set |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        m = e.meta
+        lines.append(
+            f"| `{e.name}` | `{e.cls.__name__}` | {_planning_form(e)} | "
+            f"{_chunk_param_semantics(e)} | "
+            f"{'yes' if m.adaptive else 'no'} | "
+            f"{'yes' if m.requires_profiling else 'no'} | "
+            f"{m.sync} | {m.o_cs:g} | "
+            f"{'yes' if m.worker_dependent else 'no'} | "
+            f"{'yes' if e.paper_set else 'no'} |")
+    lines += [
+        "",
+        "## Column semantics",
+        "",
+        "- **host class** — the reference state machine in "
+        "`repro.core.techniques` (`spec.make(n=..., p=...)` instantiates "
+        "it); drives the discrete-event simulator and the host planner.",
+        "- **planning form** — *in-graph* techniques carry a jit-"
+        "compatible closed form (`repro.core.jax_sched.plan_chunks` / "
+        "`ScheduleSpec(backend=\"graph\")`): either a direct array "
+        "builder or a per-request `lax.while_loop` rule (*batched* = the "
+        "factoring family, chunk frozen per batch of P requests).  *Host "
+        "band* techniques plan through the reference class only.",
+        "- **`chunk_param`** — OpenMP chunk parameter: the exact chunk "
+        "size for `static`/`ss`, a lower-bound threshold for every other "
+        "technique (paper Sec. 3).",
+        "- **adaptive** — chunk sizes fold measured telemetry "
+        "(`complete_chunk` / `adapt_every` cadence); adaptivity is what "
+        "`MoEBalancer` and the serving scheduler rely on.",
+        "- **profiling** — needs per-iteration mu/sigma (or overhead h) "
+        "up front: the `profile_workload` inputs from paper Sec. 4.4.",
+        "- **sync** — synchronization primitive on a shared queue "
+        "(`none` / `atomic` / `mutex`); with **o_cs**, the relative "
+        "chunk-calculation cost, it parameterizes the simulator's "
+        "three-factor overhead model (o_sr, o_cs, o_sync).",
+        "- **worker-dep** — chunk sizes depend on the requesting "
+        "worker's identity (e.g. WF2's fixed weights); tells the batch "
+        "engine the sequence is not precomputable.",
+        "- **paper set** — one of the 14 techniques LB4OMP adds over "
+        "standard OpenMP scheduling (paper Sec. 3.1).",
+        "",
+        "Plugins registered with `@register_technique` (see "
+        "`examples/custom_technique.py`) appear here automatically on "
+        "regeneration.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> None:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.schedule",
+        description="Generate docs/techniques.md from the live registry.")
+    ap.add_argument("--doc", action="store_true",
+                    help="print the generated technique reference")
+    ap.add_argument("--out", metavar="FILE",
+                    help="write the generated reference to FILE")
+    ap.add_argument("--check", metavar="FILE",
+                    help="exit 1 unless FILE matches the generator output "
+                         "byte-for-byte (the CI docs-sync gate)")
+    args = ap.parse_args(argv)
+    if not (args.doc or args.out or args.check):
+        ap.error("pass --doc, --out FILE, or --check FILE")
+
+    # Populate the *canonical* registry: under `python -m`, this file runs
+    # as __main__ with its own empty REGISTRY; the host classes and graph
+    # forms registered into repro.core.schedule's instance.
+    import repro.core  # noqa: F401  (imports techniques + jax_sched)
+    from repro.core.schedule import REGISTRY as canonical
+
+    doc = generate_techniques_doc(canonical)
+    if args.check:
+        try:
+            with open(args.check, encoding="utf-8") as f:
+                current = f.read()
+        except FileNotFoundError:
+            current = None
+        if current != doc:
+            sys.stderr.write(
+                f"docs-sync: {args.check} is stale — regenerate with\n"
+                f"  PYTHONPATH=src python -m repro.core.schedule --doc "
+                f"--out {args.check}\n")
+            raise SystemExit(1)
+        print(f"docs-sync OK: {args.check} matches the registry "
+              f"({len(canonical)} techniques)")
+        return
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(doc)
+        print(f"wrote {args.out}")
+    else:
+        sys.stdout.write(doc)
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via CI docs-sync
+    _main()

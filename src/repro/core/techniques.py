@@ -183,7 +183,8 @@ class Technique:
 class Static(Technique):
     """schedule(static[,c]) — one pre-planned round, zero synchronization."""
 
-    spec = TechniqueSpec("static", False, False, "none", 1.0)
+    spec = TechniqueSpec("static", False, False, "none", 1.0,
+                         chunk_exact=True)
 
     def _init(self, **kw):
         del kw
@@ -206,7 +207,8 @@ class Static(Technique):
 class SelfScheduling(Technique):
     """SS == schedule(dynamic,c): fixed chunk c (default 1) per request."""
 
-    spec = TechniqueSpec("ss", False, False, "atomic", 1.0)
+    spec = TechniqueSpec("ss", False, False, "atomic", 1.0,
+                         chunk_exact=True)
 
     def _threshold(self, size: int) -> int:
         return size  # chunk_param is the exact size

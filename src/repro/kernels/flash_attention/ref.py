@@ -1,8 +1,9 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracle for the flash-attention kernels."""
 
 from __future__ import annotations
 
 import math
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import jax
@@ -10,8 +11,14 @@ import jax
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
-    """q, k, v: (bh, s, hd) -> (bh, s, hd), fp32 math."""
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  kv_lens: Optional[Sequence[int]] = None):
+    """q, k, v: (bh, s, hd) -> (bh, s, hd), fp32 math.
+
+    ``kv_lens`` (per-lane valid KV lengths, shape (bh,)) masks columns at
+    or beyond each lane's length — the ragged-decode oracle for the
+    schedule-aware kernel.  Rows with every column masked return 0.
+    """
     bh, s, hd = q.shape
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
@@ -22,7 +29,14 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
         mask &= i[None, :] <= i[:, None]
     if window > 0:
         mask &= (i[:, None] - i[None, :]) < window
-    scores = jnp.where(mask[None], scores, NEG_INF)
+    mask = jnp.broadcast_to(mask[None], (bh, s, s))
+    if kv_lens is not None:
+        lens = jnp.asarray(kv_lens, jnp.int32)
+        mask &= i[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (ragged padding): uniform softmax garbage -> 0
+    alive = mask.any(axis=-1, keepdims=True)
+    probs = jnp.where(alive, probs, 0.0)
     out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)

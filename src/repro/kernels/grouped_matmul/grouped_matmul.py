@@ -9,10 +9,14 @@ This kernel is megablox-shaped: a 1-D grid over row-block tiles, with
 scalar-prefetch descriptor arrays (expert id + row offset per tile) that
 the BlockSpec index_maps consume to pick the right expert weight block and
 x rows.  The descriptor order is produced by the DLS planner
-(`repro.balance.moe.plan_tiles`): chunk-calculated (FAC2/WF-weighted)
-interleaving of expert tiles, so that when the grid is split across cores
-each core's share of tiles has near-equal work — the paper's chunk
-calculus applied to MXU tiles.
+(`repro.balance.moe.plan_tiles`, built on
+`repro.core.jax_sched.plan_tiles_for_kernel`): tile-to-grid-step
+assignment is chunk-calculated by any registry technique (static, ss,
+gss, fac2, tap, ...) over the measured per-expert loads, so that when the
+grid is split across cores each core's contiguous share of steps has
+near-equal work — the paper's chunk calculus applied to MXU tiles.  The
+kernel itself only follows the descriptor array, which is why the output
+is bit-identical for every technique (tiles are independent).
 
 VMEM per step: x (bm, d) + w (d, bn) + out (bm, bn); bm = 128-aligned
 rows, bn = the expert FFN width block.
@@ -62,9 +66,16 @@ def grouped_matmul_tiles(x_tiles, weights, tile_expert, *,
         out_specs=pl.BlockSpec((1, bm, f), lambda i, eid: (i, 0, 0)),
     )
     kernel = functools.partial(_gmm_kernel, block_rows=bm)
+    itemsize = jnp.dtype(x_tiles.dtype).itemsize
+    cost = pl.CostEstimate(
+        flops=2 * t * bm * d * f,
+        bytes_accessed=(t * bm * d + e * d * f + t * bm * f) * itemsize,
+        transcendentals=0,
+    )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, bm, f), x_tiles.dtype),
+        cost_estimate=cost,
         interpret=interpret,
     )(tile_expert, x_tiles, weights)

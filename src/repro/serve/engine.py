@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.jax_sched import plan_tiles_for_kernel
+from ..core.metrics import LoopRecorder
+from ..core.schedule import resolve
 from ..models import decode_step, init_decode_state
 from .scheduler import Request, RequestScheduler
 
@@ -44,12 +47,22 @@ class EngineStats:
 class DecodeEngine:
     def __init__(self, cfg, params, slots: int = 4, max_len: int = 128,
                  technique="fac2", greedy: bool = True,
-                 temperature: float = 1.0, seed: int = 0):
+                 temperature: float = 1.0, seed: int = 0,
+                 kernel_schedule="fac2", kernel_p: int = 8,
+                 kv_block: int = 16):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.sched = RequestScheduler(num_workers=slots, technique=technique)
+        # decode-attention KV tile planning: the same
+        # plan_tiles_for_kernel path the Pallas kernels use, driven by the
+        # ragged per-lane cache lengths; records land in kernel_recorder
+        # (LoopInstanceRecord telemetry an AutoSelector can consume)
+        self.kernel_spec = resolve(kernel_schedule, default="fac2")
+        self.kernel_p = kernel_p
+        self.kv_block = kv_block
+        self.kernel_recorder = LoopRecorder()
         self._step = jax.jit(
             lambda p, st, t: decode_step(p, cfg, st, t))
         self.state = init_decode_state(cfg, slots, max_len=max_len)
@@ -109,8 +122,36 @@ class DecodeEngine:
     def output(self, rid: int) -> list[int]:
         return self._outputs.get(rid, [])
 
+    @property
+    def kernel_records(self):
+        """Kernel-level telemetry: one LoopInstanceRecord per admission
+        (decode-attention KV tile plan over the ragged lane lengths)."""
+        return self.kernel_recorder.records
+
     # -- internals ---------------------------------------------------------------
+    def _record_kernel_plan(self) -> None:
+        """Plan the decode-attention KV scan as kernel tiles.
+
+        Each active lane's valid KV prefix is ragged (lanes restart
+        independently under continuous batching); the per-lane cost is
+        its live KV block count, and the DLS plan models splitting the
+        attention grid across ``kernel_p`` cores — the same path
+        ``flash_attention(schedule=..., kv_lens=...)`` executes.
+        """
+        lens = np.asarray(self.state.pos)
+        live = np.array([int(l) for l, a in zip(lens, self._active)
+                         if a is not None], dtype=np.float64)
+        if live.size == 0:
+            return
+        costs = np.maximum(np.ceil(live / self.kv_block), 1.0)
+        plan = plan_tiles_for_kernel(costs, p=self.kernel_p,
+                                     technique=self.kernel_spec)
+        self.kernel_recorder.add(plan.to_record(
+            "decode_kv",
+            instance=self.kernel_recorder.next_instance("decode_kv")))
+
     def _refill(self):
+        admitted = False
         for s in range(self.slots):
             if self._active[s] is None:
                 if not self._queue[s]:
@@ -123,6 +164,7 @@ class DecodeEngine:
                         self._queue[s] = chunk
                         self._chunk_open[s] = True
                         self._chunk_steps[s] = 0
+                        admitted = True
                 if self._queue[s]:
                     req = self._queue[s].pop(0)
                     if self._used[s]:
@@ -133,6 +175,10 @@ class DecodeEngine:
                     self._emitted[s] = 0
                     self._outputs[req.rid] = []
                     self._tokens[s, 0] = self._prompt_left[s].pop(0)
+        if admitted:
+            # after activation, so the plan sees the admitted lanes too
+            # (a single-slot engine would otherwise never record)
+            self._record_kernel_plan()
 
     def _advance(self, stats: EngineStats):
         self._rng, sub = jax.random.split(self._rng)

@@ -1,0 +1,158 @@
+"""Direct coverage of core/metrics.py — the Table-1 metric edge cases and
+the LoopRecorder bookkeeping (KMP_TIME_LOOPS / KMP_PRINT_CHUNKS)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import LoopInstanceRecord, LoopRecorder, cov, percent_imbalance
+from repro.core.planner import PlannedChunk
+
+
+# ---------------------------------------------------------------------------
+# cov
+# ---------------------------------------------------------------------------
+
+
+def test_cov_empty_is_zero():
+    assert cov([]) == 0.0
+    assert cov(np.zeros(0)) == 0.0
+
+
+def test_cov_single_thread_is_zero():
+    assert cov([3.7]) == 0.0
+
+
+def test_cov_zero_and_negative_mean_is_zero():
+    assert cov([0.0, 0.0, 0.0]) == 0.0
+    assert cov([-1.0, 1.0]) == 0.0          # mean 0
+    assert cov([-2.0, -4.0]) == 0.0         # mean < 0
+
+
+def test_cov_known_value():
+    # sigma/mu for [1, 3]: mean 2, population std 1
+    assert cov([1.0, 3.0]) == pytest.approx(0.5)
+    assert cov([5.0, 5.0, 5.0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# percent_imbalance
+# ---------------------------------------------------------------------------
+
+
+def test_pi_fewer_than_two_threads_is_zero():
+    assert percent_imbalance([]) == 0.0
+    assert percent_imbalance([1.0]) == 0.0
+    assert percent_imbalance([1.0], t_par=5.0) == 0.0
+
+
+def test_pi_zero_or_negative_t_par_is_zero():
+    assert percent_imbalance([0.0, 0.0]) == 0.0          # max() == 0
+    assert percent_imbalance([1.0, 2.0], t_par=0.0) == 0.0
+    assert percent_imbalance([1.0, 2.0], t_par=-1.0) == 0.0
+
+
+def test_pi_default_t_par_is_max_finish():
+    t = [1.0, 2.0, 3.0, 4.0]
+    assert percent_imbalance(t) == pytest.approx(
+        percent_imbalance(t, t_par=4.0))
+
+
+def test_pi_known_value():
+    # (4 - 2.5) / 4 * (4/3) * 100 = 50
+    assert percent_imbalance([1.0, 2.0, 3.0, 4.0]) == pytest.approx(50.0)
+    assert percent_imbalance([2.0, 2.0]) == 0.0          # balanced
+
+
+# ---------------------------------------------------------------------------
+# LoopInstanceRecord / LoopRecorder
+# ---------------------------------------------------------------------------
+
+
+def _rec(loop="L", technique="fac2", instance=0, times=(1.0, 2.0),
+         chunks=None):
+    times = np.asarray(times, np.float64)
+    return LoopInstanceRecord(
+        loop=loop, technique=technique, instance=instance, p=times.size,
+        n=100, chunk_param=1, t_par=float(times.max(initial=0.0)),
+        thread_times=times, thread_finish=times.copy(), n_chunks=7,
+        sched_time=0.1, chunks=chunks)
+
+
+def test_record_metric_properties_match_functions():
+    r = _rec(times=(1.0, 3.0))
+    assert r.cov == pytest.approx(cov([1.0, 3.0]))
+    assert r.percent_imbalance == pytest.approx(
+        percent_imbalance([1.0, 3.0], t_par=3.0))
+
+
+def test_record_to_dict_roundtrips_chunks():
+    c = PlannedChunk(worker=1, start=0, size=5, batch=0)
+    d = _rec(chunks=[c]).to_dict()
+    assert d["chunks"] == [dict(worker=1, start=0, size=5, batch=0)]
+    assert "chunks" not in _rec().to_dict()
+
+
+def test_recorder_strips_chunks_unless_print_chunks():
+    c = PlannedChunk(worker=0, start=0, size=5, batch=0)
+    quiet = LoopRecorder()
+    quiet.add(_rec(chunks=[c]))
+    assert quiet.records[0].chunks is None
+    loud = LoopRecorder(print_chunks=True)
+    loud.add(_rec(chunks=[c]))
+    assert loud.records[0].chunks == [c]
+
+
+def test_by_technique_preserves_first_seen_order():
+    rec = LoopRecorder()
+    rec.add(_rec(technique="gss", instance=0))
+    rec.add(_rec(technique="fac2", instance=0))
+    rec.add(_rec(technique="gss", instance=1))
+    by = rec.by_technique()
+    assert list(by) == ["gss", "fac2"]            # first-seen order
+    assert [r.instance for r in by["gss"]] == [0, 1]   # insertion order
+    assert len(by["fac2"]) == 1
+
+
+def test_summary_groups_and_averages():
+    rec = LoopRecorder()
+    rec.add(_rec(loop="A", technique="ss", times=(1.0, 1.0)))
+    rec.add(_rec(loop="A", technique="ss", times=(1.0, 3.0)))
+    rec.add(_rec(loop="B", technique="ss", times=(2.0, 2.0)))
+    rows = rec.summary()
+    assert [(r["loop"], r["technique"]) for r in rows] == [
+        ("A", "ss"), ("B", "ss")]
+    a = rows[0]
+    assert a["instances"] == 2
+    assert a["mean_t_par"] == pytest.approx(2.0)     # (1 + 3) / 2
+    assert a["mean_cov"] == pytest.approx(cov([1.0, 3.0]) / 2)
+
+
+def test_save_load_roundtrip(tmp_path):
+    rec = LoopRecorder(print_chunks=True)
+    rec.add(_rec(chunks=[PlannedChunk(worker=0, start=0, size=5, batch=0)]))
+    path = tmp_path / "loops.json"
+    rec.save(str(path))
+    loaded = LoopRecorder.load(str(path))
+    assert len(loaded) == 1
+    assert loaded[0]["technique"] == "fac2"
+    assert loaded[0]["thread_times"] == [1.0, 2.0]
+    assert loaded[0]["chunks"][0]["size"] == 5
+
+
+def test_next_instance_counts_per_loop():
+    rec = LoopRecorder()
+    assert rec.next_instance("A") == 0
+    rec.add(_rec(loop="A"))
+    rec.add(_rec(loop="B"))
+    rec.add(_rec(loop="A", instance=1))
+    assert rec.next_instance("A") == 2
+    assert rec.next_instance("B") == 1
+    assert rec.next_instance("C") == 0
+
+
+def test_record_replace_keeps_metrics_consistent():
+    r = _rec(times=(2.0, 2.0))
+    r2 = dataclasses.replace(r, thread_times=np.array([1.0, 3.0]))
+    assert r.cov == 0.0 and r2.cov > 0.0

@@ -1,0 +1,65 @@
+"""Offline link check over the markdown docs.
+
+Verifies that every relative link target in docs/*.md and README.md
+exists in the working tree (external http(s)/mailto links are skipped —
+CI stays network-free).  In-page anchors (`#fragment`) are checked
+against the target file's headings.
+
+    python tools/check_links.py [files...]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+INLINE_CODE = re.compile(r"`[^`]*`")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def _anchor(text: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    text = INLINE_CODE.sub(lambda m: m.group(0).strip("`"), text)
+    text = re.sub(r"[^\w\s-]", "", text.lower())
+    return re.sub(r"\s+", "-", text.strip())
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {_anchor(h) for h in HEADING.findall(path.read_text("utf-8"))}
+
+
+def check(files: list[pathlib.Path]) -> list[str]:
+    errors = []
+    for md in files:
+        text = md.read_text("utf-8")
+        for target in LINK.findall(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{md}: broken link -> {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                if _anchor(fragment) not in anchors_of(dest):
+                    errors.append(f"{md}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = ([pathlib.Path(a) for a in argv] if argv else
+             sorted(root.glob("docs/*.md")) + [root / "README.md"])
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"link check: {len(files)} files, "
+          f"{len(errors)} broken" + (" — FAIL" if errors else " — OK"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
