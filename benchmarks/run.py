@@ -11,7 +11,8 @@ import argparse
 import sys
 import time
 
-from . import batch_bench, framework_bench, kernel_sched_bench, paper_campaign
+from . import (batch_bench, cluster_balance, framework_bench,
+               kernel_sched_bench, paper_campaign)
 from .common import emit
 
 
@@ -41,6 +42,9 @@ def main() -> None:
         "batch_speedup": lambda: batch_bench.rows(
             n=n_small, reps=3 if args.fast else 10),
         "kernel_sched": kernel_sched_bench.rows,
+        # quick-sized; named so emit() doesn't overwrite the committed
+        # full-run cluster_balance.json artifact
+        "cluster_balance_quick": cluster_balance.rows,
     }
     # roofline needs dry-run artifacts; include when present
     try:

@@ -106,17 +106,22 @@ class LoopRecorder:
     def __init__(self, print_chunks: bool = False):
         self.print_chunks = print_chunks
         self.records: list[LoopInstanceRecord] = []
+        # per-loop record counts, kept in add(): next_instance is O(1)
+        # instead of scanning all records (quadratic over a long serving
+        # or cluster run that emits one record per admission)
+        self._loop_counts: dict[str, int] = {}
 
     def add(self, record: LoopInstanceRecord) -> None:
         if not self.print_chunks:
             record = dataclasses.replace(record, chunks=None)
         self.records.append(record)
+        self._loop_counts[record.loop] = self._loop_counts.get(record.loop, 0) + 1
 
     def next_instance(self, loop: str) -> int:
         """The next execution-instance index for ``loop`` — producers that
         emit records across call sites (kernel wrappers, balancers) use
         this so per-loop instance ids stay monotone in one recorder."""
-        return sum(r.loop == loop for r in self.records)
+        return self._loop_counts.get(loop, 0)
 
     def by_technique(self) -> dict[str, list[LoopInstanceRecord]]:
         out: dict[str, list[LoopInstanceRecord]] = {}

@@ -8,6 +8,7 @@ xla_force_host_platform_device_count dance).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from ..sharding import DEFAULT_RULES, ShardingRules
 
@@ -28,6 +29,30 @@ def make_host_mesh():
     """Whatever devices exist locally (smoke/integration tests)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def replica_submeshes(mesh, num_replicas: int, axis: str = "data"):
+    """Replica = data-parallel submesh — the cluster layer's "node".
+
+    Splits ``mesh`` into ``num_replicas`` contiguous submeshes along
+    ``axis`` (each keeps the full model axis), one per serving replica:
+    the ``ClusterRouter`` (`repro.serve.cluster`) hands node-sized
+    request chunks to replicas, and each replica's ``DecodeEngine`` runs
+    on its own submesh with its intra-node technique.  The axis size
+    must divide evenly — replicas are homogeneous in device count
+    (heterogeneous *throughput* is what the node-level AWF weights
+    learn).
+    """
+    if num_replicas <= 0:
+        raise ValueError(f"need num_replicas > 0, got {num_replicas}")
+    ax = mesh.axis_names.index(axis)
+    size = mesh.devices.shape[ax]
+    if size % num_replicas:
+        raise ValueError(
+            f"mesh axis {axis!r} of size {size} does not split into "
+            f"{num_replicas} replicas")
+    return [jax.sharding.Mesh(sub, mesh.axis_names)
+            for sub in np.split(mesh.devices, num_replicas, axis=ax)]
 
 
 def production_rules(mesh, overrides: dict | None = None) -> ShardingRules:

@@ -3,6 +3,16 @@
 Boots the DecodeEngine (continuous batching with DLS admission and
 lane-isolated KV/recurrent caches) on the selected architecture and
 pushes a synthetic ragged request mix through it.
+
+With ``--replicas N`` the driver runs the two-level cluster path
+(`repro.serve.cluster`): a ``ClusterRouter`` distributes the request
+stream across N replica engines with the ``--node-technique`` schedule
+(a replica pull is a node-sized chunk; replicas report measured decode
+steps back, so adaptive node techniques learn replica throughput), and
+each replica's engine keeps its own intra-node ``--technique``.  On a
+pod, each replica binds to one data-parallel submesh
+(``launch.mesh.replica_submeshes``); the host driver here runs the
+replica engines on the local devices.
 """
 
 from __future__ import annotations
@@ -18,6 +28,46 @@ from ..serve.engine import DecodeEngine
 from ..serve.scheduler import Request
 
 
+def run_cluster(cfg, params, spec, node_spec, *, replicas: int,
+                slots: int, max_len: int, requests: list[Request]) -> dict:
+    """Two-level serving: node-level DLS over replica DecodeEngines.
+
+    Replica engines run one node-sized chunk at a time (the host driver
+    serializes them on the local devices; on a pod each engine owns a
+    data-parallel submesh and they run concurrently).  The router's
+    measured unit is decode steps — the same unit the engines feed their
+    intra-node scheduler.
+    """
+    from ..core.metrics import cov, percent_imbalance
+    from ..serve.cluster import ClusterRouter
+
+    engines = [DecodeEngine(cfg, params, slots=slots, max_len=max_len,
+                            technique=spec) for _ in range(replicas)]
+    router = ClusterRouter(replicas, schedule=node_spec)
+    for r in requests:
+        router.submit(r)
+    steps = np.zeros(replicas)
+    completed = tokens = 0
+    while True:
+        rep = int(np.argmin(steps))
+        chunk = router.pull(rep)
+        if not chunk:
+            break
+        for q in chunk:
+            engines[rep].submit(q)
+        stats = engines[rep].run()
+        router.complete(rep, busy=float(stats.steps))
+        steps[rep] += stats.steps
+        completed += stats.completed
+        tokens += stats.tokens
+    return dict(completed=completed, tokens=tokens,
+                replica_steps=steps.tolist(),
+                replica_requests=router.replica_requests.tolist(),
+                node_chunks=router.node_chunks,
+                cross_node_cov=cov(steps),
+                cross_node_pi=percent_imbalance(steps))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
@@ -27,6 +77,12 @@ def main():
     ap.add_argument("--technique", default=None,
                     help="DLS admission ScheduleSpec, e.g. 'fac2,8' "
                          "(default: $LB_SCHEDULE, else fac2)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas; >1 enables the two-level "
+                         "cluster path (node-level DLS over engines)")
+    ap.add_argument("--node-technique", default="awf_b",
+                    help="node-level ScheduleSpec for --replicas > 1 "
+                         "(a replica pull is a node-sized chunk)")
     ap.add_argument("--kv8", action="store_true",
                     help="int8-quantized KV cache")
     ap.add_argument("--full", action="store_true")
@@ -43,16 +99,33 @@ def main():
     from ..core.schedule import resolve
 
     spec = resolve(args.technique, default="fac2")
-    print(f"arch={cfg.name} slots={args.slots} technique={spec}")
+    rng = np.random.default_rng(args.seed)
+    requests = [Request(
+        rid=i, arrival=0.0,
+        prompt_len=int(rng.integers(4, args.max_len // 4)),
+        max_new_tokens=int(rng.integers(4, args.max_len // 4)))
+        for i in range(args.requests)]
     params, _ = init_decoder(jax.random.key(args.seed), cfg)
+
+    if args.replicas > 1:
+        node_spec = resolve(args.node_technique, default="awf_b")
+        print(f"arch={cfg.name} replicas={args.replicas} slots={args.slots} "
+              f"schedule={node_spec}/{spec}")
+        out = run_cluster(cfg, params, spec, node_spec,
+                          replicas=args.replicas, slots=args.slots,
+                          max_len=args.max_len, requests=requests)
+        print(f"completed={out['completed']}/{args.requests} "
+              f"tokens={out['tokens']} node_chunks={out['node_chunks']} "
+              f"replica_requests={out['replica_requests']}")
+        print(f"cross-node steps c.o.v.={out['cross_node_cov']:.3f} "
+              f"p.i.={out['cross_node_pi']:.1f}%")
+        return
+
+    print(f"arch={cfg.name} slots={args.slots} technique={spec}")
     eng = DecodeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                        technique=spec)
-    rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i, arrival=0.0,
-            prompt_len=int(rng.integers(4, args.max_len // 4)),
-            max_new_tokens=int(rng.integers(4, args.max_len // 4))))
+    for r in requests:
+        eng.submit(r)
     stats = eng.run()
     print(f"completed={stats.completed}/{args.requests} "
           f"steps={stats.steps} new_tokens={stats.tokens} "

@@ -1,4 +1,14 @@
-"""Serving: DLS continuous batching + decode engine."""
+"""Serving: DLS continuous batching + decode engine + cluster routing."""
 
+from .cluster import (  # noqa: F401
+    ClusterConfig,
+    ClusterRecord,
+    ClusterRouter,
+    TwoLevelSpec,
+    cluster_grid,
+    make_traffic,
+    simulate_cluster,
+    simulate_cluster_batch,
+)
 from .engine import DecodeEngine, EngineStats  # noqa: F401
 from .scheduler import Request, RequestScheduler, simulate_serving  # noqa: F401

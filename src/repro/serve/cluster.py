@@ -1,0 +1,435 @@
+"""Two-level cluster load balancing: node-level DLS over replica engines.
+
+The paper's cross-node result — and the two-level scheme of Mohammed et
+al., "Two-level Dynamic Load Balancing for High Performance Scientific
+Applications" (arXiv:1911.06714) — composes two schedulers:
+
+  * an **upper (node) level** that hands *node-sized chunks* of the
+    arrival stream to replicas (a replica "pull" is one continuous-batch
+    refill for a whole node), using any registry technique: SS/GSS/FAC2
+    for work-stealing-style dynamics, AWF/AF for weights that *learn*
+    heterogeneous or degraded replicas from measured replica busy time;
+  * each replica's existing **intra-node level** — the
+    ``RequestScheduler``/``DecodeEngine`` admission technique over its
+    decode slots.
+
+The pair is a :class:`TwoLevelSpec` (``node_schedule`` x
+``thread_schedule``), mirroring the MPI-rank x OpenMP-thread split of
+the source work.  ``simulate_cluster`` is the event-driven two-level
+simulator (it reuses :func:`simulate_serving` per replica chunk);
+``cluster_grid``/``simulate_cluster_batch`` run (node-technique x
+thread-technique x traffic) config grids in the ``batch_sim`` idiom
+(shared-scenario dedup, one result dict per grid point) for
+``benchmarks/cluster_balance.py``.  Cross-node imbalance aggregates
+per-replica *busy* times through the paper's Table-1 metrics
+(``cov`` / ``percent_imbalance``), and every cluster run can feed a
+:class:`ClusterRecord` into a ``LoopRecorder``.
+
+Like ``serve/scheduler.py`` this module is numpy-only — the jax-backed
+replica engines bind to it in ``launch/serve.py`` (replica =
+data-parallel submesh, see ``launch/mesh.py:replica_submeshes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.metrics import LoopInstanceRecord, LoopRecorder, cov, percent_imbalance
+from ..core.schedule import ScheduleSpec, resolve
+from .scheduler import Request, RequestScheduler, simulate_serving
+
+__all__ = [
+    "TwoLevelSpec",
+    "ClusterRouter",
+    "ClusterRecord",
+    "simulate_cluster",
+    "ClusterConfig",
+    "cluster_grid",
+    "simulate_cluster_batch",
+    "make_traffic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoLevelSpec:
+    """The two-level schedule pair: node-level x thread-level.
+
+    Text form is ``"node_spec/thread_spec"`` with each side the usual
+    ``OMP_SCHEDULE`` grammar, e.g. ``"awf_b/fac2,8"`` (AWF-B across
+    replicas, FAC2 with chunk floor 8 across each replica's slots).
+    A bare ``"gss"`` means GSS at the node level with the default FAC2
+    below it.
+    """
+
+    node: ScheduleSpec
+    thread: ScheduleSpec
+
+    @classmethod
+    def parse(cls, text: "str | TwoLevelSpec | ScheduleSpec",
+              default_thread: "str | ScheduleSpec" = "fac2") -> "TwoLevelSpec":
+        if isinstance(text, TwoLevelSpec):
+            return text
+        if isinstance(text, ScheduleSpec):
+            return cls(node=text.validated(), thread=resolve(default_thread))
+        node_txt, _, thread_txt = str(text).partition("/")
+        return cls(node=resolve(node_txt),
+                   thread=resolve(thread_txt or None, default=default_thread))
+
+    def __str__(self) -> str:
+        return f"{self.node}/{self.thread}"
+
+
+class ClusterRouter:
+    """Node-level DLS admission: replicas pull node-sized request chunks.
+
+    Wraps a :class:`RequestScheduler` whose "workers" are replicas, so
+    the full registry applies unchanged at the node level — including
+    plan-rebuild-with-inherited-state over a refreshed backlog and the
+    grant-folding/busy-time telemetry contracts.  ``complete(replica,
+    busy)`` reports the replica's measured *busy* time for its last
+    chunk (sum of per-slot service time, or decode steps on a real
+    engine — any monotone unit), which is what lets AWF/AF node weights
+    converge toward replica speed ratios under heterogeneity.
+    """
+
+    def __init__(self, num_replicas: int,
+                 schedule: Union[ScheduleSpec, str, None] = "awf_b",
+                 chunk_param: Optional[int] = None):
+        if num_replicas <= 0:
+            raise ValueError(f"need num_replicas > 0, got {num_replicas}")
+        self.num_replicas = num_replicas
+        self.sched = RequestScheduler(num_workers=num_replicas,
+                                      technique=schedule,
+                                      chunk_param=chunk_param)
+        self.spec = self.sched.spec
+        # per-replica cumulative telemetry (the ClusterRecord inputs)
+        self.replica_busy = np.zeros(num_replicas)
+        self.replica_requests = np.zeros(num_replicas, dtype=np.int64)
+        self.node_chunks = 0
+
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def pull(self, replica: int) -> list[Request]:
+        chunk = self.sched.pull(replica)
+        if chunk:
+            self.node_chunks += 1
+            self.replica_requests[replica] += len(chunk)
+        return chunk
+
+    def complete(self, replica: int, busy: float) -> None:
+        self.replica_busy[replica] += float(busy)
+        self.sched.complete(replica, elapsed=float(busy))
+
+    @property
+    def backlog(self) -> int:
+        return self.sched.backlog
+
+    @property
+    def node_weights(self) -> Optional[np.ndarray]:
+        """Current adaptive per-replica weights (AWF family), else None."""
+        tech = self.sched._tech
+        w = getattr(tech, "weights", None)
+        return None if w is None else np.asarray(w, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class ClusterRecord:
+    """Cross-node telemetry for one cluster run — replica == "thread".
+
+    ``to_record`` projects it onto a :class:`LoopInstanceRecord` (busy
+    times as thread_times, replica finish timestamps as thread_finish,
+    node-chunk count as the scheduling-round count), so cluster runs
+    feed the same ``cov``/``percent_imbalance``/``LoopRecorder.summary``
+    machinery as simulated loops and kernel tile plans.
+    """
+
+    schedule: TwoLevelSpec
+    num_replicas: int
+    workers_per_replica: int
+    n: int
+    makespan: float
+    replica_busy: np.ndarray
+    replica_finish: np.ndarray
+    replica_requests: np.ndarray
+    node_chunks: int
+
+    @property
+    def cov(self) -> float:
+        return cov(self.replica_busy)
+
+    @property
+    def percent_imbalance(self) -> float:
+        return percent_imbalance(self.replica_busy, self.makespan)
+
+    def to_record(self, loop: str = "cluster",
+                  instance: int = 0) -> LoopInstanceRecord:
+        return LoopInstanceRecord(
+            loop=loop, technique=str(self.schedule), instance=instance,
+            p=self.num_replicas, n=self.n,
+            chunk_param=self.schedule.node.chunk_param,
+            t_par=self.makespan,
+            thread_times=np.asarray(self.replica_busy, dtype=np.float64),
+            thread_finish=np.asarray(self.replica_finish, dtype=np.float64),
+            n_chunks=self.node_chunks, sched_time=0.0)
+
+
+def simulate_cluster(requests: Sequence[Request], num_replicas: int,
+                     workers_per_replica: int = 4,
+                     schedule: Union[TwoLevelSpec, str] = "awf_b/fac2",
+                     replica_speed: Optional[Sequence[float]] = None,
+                     router: Optional[ClusterRouter] = None,
+                     recorder: Optional[LoopRecorder] = None,
+                     loop: str = "cluster",
+                     return_completions: bool = False) -> dict:
+    """Event-driven two-level serving simulation.
+
+    The upper level is a :class:`ClusterRouter`: a replica pulls its
+    next node-sized chunk the moment its first slot goes hungry (its
+    backlog has drained and the earliest slot frees), while its other
+    slots are still finishing their last admissions — so node-level
+    chunks pipeline instead of barriering on the slowest slot.  Each
+    chunk is served by :func:`simulate_serving` — the existing
+    intra-node event simulator — continued across chunks with the
+    replica's persistent worker clocks and persistent
+    ``RequestScheduler`` (so intra-node AWF/AF state also survives
+    refills).  The chunk's summed slot busy time is reported back to the
+    router with the replica's *next* pull, exactly the
+    request-more-work/report-measurement cycle ``DecodeEngine._refill``
+    runs — closing the loop that lets adaptive node techniques learn
+    replica throughput.
+
+    Replica pulls are processed in global time order (an event heap on
+    drain times), so the router's shared-queue state sees the same pull
+    sequence a real cluster would.
+
+    ``replica_speed`` are cost multipliers per replica (>1 == slower),
+    matching ``simulate_serving``'s ``worker_speed`` convention.  Stats
+    mirror ``simulate_serving`` plus cross-node aggregates (per-replica
+    busy is reported *per slot* — ``busy / workers_per_replica`` — so it
+    is comparable with the makespan in ``percent_imbalance``); pass a
+    ``recorder`` to append a :class:`ClusterRecord` projection.  Pass a
+    ``router`` to continue a previous call's node-level state (wave-by-
+    wave serving: AWF node weights learned on one wave carry to the
+    next); telemetry in the result is always this call's delta.
+    """
+    import heapq
+
+    spec = TwoLevelSpec.parse(schedule)
+    speed = (np.ones(num_replicas) if replica_speed is None
+             else np.asarray(replica_speed, dtype=np.float64))
+    if speed.shape != (num_replicas,):
+        raise ValueError(
+            f"replica_speed must have shape ({num_replicas},), got {speed.shape}")
+    if router is None:
+        router = ClusterRouter(num_replicas, schedule=spec.node)
+    elif router.num_replicas != num_replicas:
+        raise ValueError(f"router has {router.num_replicas} replicas, "
+                         f"expected {num_replicas}")
+    elif router.spec != spec.node:
+        # a reused router keeps its own node technique; a mismatched
+        # schedule would mislabel every record and stat downstream
+        raise ValueError(f"router schedules {router.spec}, but the "
+                         f"requested node schedule is {spec.node}")
+    for r in sorted(requests, key=lambda r: r.arrival):
+        router.submit(r)
+    # snapshot router telemetry so a reused router (wave-by-wave serving
+    # with persistent node-level adaptive state) reports per-call deltas
+    busy0 = router.replica_busy.copy()
+    requests0 = router.replica_requests.copy()
+    chunks0 = router.node_chunks
+    clocks = [np.zeros(workers_per_replica) for _ in range(num_replicas)]
+    intra = [RequestScheduler(num_workers=workers_per_replica,
+                              technique=spec.thread)
+             for _ in range(num_replicas)]
+    pending_busy = [0.0] * num_replicas  # last chunk's busy, not yet reported
+    done: list[tuple[int, float]] = []
+    arrivals = {r.rid: r.arrival for r in requests}
+    heap = [(0.0, rep) for rep in range(num_replicas)]
+    heapq.heapify(heap)
+    while heap:
+        _, rep = heapq.heappop(heap)
+        if pending_busy[rep]:
+            router.complete(rep, busy=pending_busy[rep])
+            pending_busy[rep] = 0.0
+        chunk = router.pull(rep)
+        if not chunk:
+            continue  # backlog empty: the replica retires
+        stats = simulate_serving(
+            chunk, num_workers=workers_per_replica, scheduler=intra[rep],
+            worker_speed=np.full(workers_per_replica, speed[rep]),
+            worker_free_at=clocks[rep], return_completions=True)
+        clocks[rep] = np.asarray(stats["worker_finish"])
+        pending_busy[rep] = float(np.sum(stats["worker_busy"]))
+        done.extend(stats["completions"])
+        # the replica requests its next node chunk when its first slot
+        # goes hungry (min finish), not when the backlog merely drained:
+        # one slow slot must not stall the refill for the idle ones
+        heapq.heappush(heap, (float(clocks[rep].min()), rep))
+
+    # flush the final chunks' measurements (no further pull will report
+    # them) so node-level adaptive state is complete for a reused router
+    for rep in range(num_replicas):
+        if pending_busy[rep]:
+            router.complete(rep, busy=pending_busy[rep])
+
+    free_at = np.array([c.max() for c in clocks])
+    # per-slot busy (raw sum / W): comparable with the makespan, so the
+    # Table-1 metrics read as usual — a replica at busy == makespan was
+    # never idle
+    slot_busy = (router.replica_busy - busy0) / workers_per_replica
+    record = ClusterRecord(
+        schedule=spec, num_replicas=num_replicas,
+        workers_per_replica=workers_per_replica, n=len(done),
+        makespan=float(free_at.max()),
+        replica_busy=slot_busy,
+        replica_finish=free_at,
+        replica_requests=router.replica_requests - requests0,
+        node_chunks=router.node_chunks - chunks0)
+    if recorder is not None:
+        recorder.add(record.to_record(loop, recorder.next_instance(loop)))
+
+    weights = router.node_weights
+    out = dict(
+        n=len(done),
+        makespan=record.makespan,
+        replica_busy=slot_busy.tolist(),
+        replica_finish=free_at.tolist(),
+        replica_requests=record.replica_requests.tolist(),
+        node_chunks=record.node_chunks,
+        cross_node_cov=record.cov,
+        cross_node_pi=record.percent_imbalance,
+        node_technique=str(spec.node),
+        thread_technique=str(spec.thread),
+        node_weights=None if weights is None else weights.tolist(),
+    )
+    if not done:
+        out.update(mean_latency=0.0, p50=0.0, p99=0.0)
+    else:
+        lat = np.array([t - arrivals[rid] for rid, t in done])
+        out.update(mean_latency=float(lat.mean()),
+                   p50=float(np.percentile(lat, 50)),
+                   p99=float(np.percentile(lat, 99)))
+    if return_completions:
+        out["completions"] = done
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Config grids (the batch_sim idiom at the cluster level)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ClusterConfig:
+    """One grid point: everything ``simulate_cluster`` takes, as data."""
+
+    schedule: Union[TwoLevelSpec, str]
+    requests: Sequence[Request]
+    num_replicas: int = 8
+    workers_per_replica: int = 4
+    replica_speed: Optional[Sequence[float]] = None
+    traffic: str = ""
+
+
+def cluster_grid(
+    schedules: Sequence[Union[TwoLevelSpec, str]],
+    traffics: Mapping[str, Sequence[Request]],
+    **common,
+) -> list[ClusterConfig]:
+    """Cartesian (schedule x traffic) grid, traffic-major like
+    ``batch_grid`` — configs sharing a request stream stay adjacent."""
+    return [
+        ClusterConfig(schedule=s, requests=reqs, traffic=name, **common)
+        for name, reqs in traffics.items()
+        for s in schedules
+    ]
+
+
+def simulate_cluster_batch(configs: Sequence[ClusterConfig],
+                           recorder: Optional[LoopRecorder] = None) -> list[dict]:
+    """Run a config grid; one result dict per config, in order.
+
+    Provably-identical grid points (same resolved two-level spec, same
+    request stream object, same shape/speeds) are simulated once and the
+    result shared — the same dedup ``simulate_batch`` applies across its
+    repetition-seed axis (the simulator is deterministic, so equal
+    configs have equal results).
+    """
+    cache: dict[tuple, dict] = {}
+    out = []
+    for c in configs:
+        spec = TwoLevelSpec.parse(c.schedule)
+        speed = (None if c.replica_speed is None
+                 else tuple(float(s) for s in c.replica_speed))
+        key = (str(spec), id(c.requests), c.num_replicas,
+               c.workers_per_replica, speed)
+        if key not in cache:
+            cache[key] = simulate_cluster(
+                c.requests, num_replicas=c.num_replicas,
+                workers_per_replica=c.workers_per_replica, schedule=spec,
+                replica_speed=c.replica_speed, recorder=recorder,
+                loop=f"cluster/{c.traffic}" if c.traffic else "cluster")
+        out.append(dict(cache[key], traffic=c.traffic))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Synthetic traffic (the skew axis of the cluster campaign)
+# ---------------------------------------------------------------------------
+
+
+def make_traffic(kind: str, n: int = 800, seed: int = 0) -> list[Request]:
+    """Synthetic arrival streams for the cluster campaign.
+
+      uniform     identical requests, all pre-arrived (the control where
+                  static replica partitioning is already balanced)
+      heavy_tail  lognormal decode lengths — regime-sensitive skew: when
+                  a drawn giant costs on the order of the ideal makespan
+                  (it happens at these parameters, depending on n and
+                  seed), the critical path is one indivisible request
+                  and static's accidental early binding can win; with
+                  milder draws dynamic wins as usual.  Kept un-gated in
+                  the campaign for exactly that honesty.
+      spiky       96% small requests + ~4% giants (hot-request skew —
+                  many giants, so spreading them across replicas pays)
+      zipf        Zipf-distributed decode lengths (power-law skew)
+      bursty      spiky sizes arriving in bursts (skew + waves; eager
+                  node chunks bind not-yet-arrived requests, so small
+                  node chunks win)
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return [Request(rid=i, arrival=0.0, prompt_len=512,
+                        max_new_tokens=128) for i in range(n)]
+    if kind == "heavy_tail":
+        return [Request(rid=i, arrival=0.0,
+                        prompt_len=int(rng.lognormal(6, 1)),
+                        max_new_tokens=int(rng.lognormal(4.5, 1.2)))
+                for i in range(n)]
+    if kind == "spiky":
+        new = rng.integers(16, 64, size=n).astype(np.int64)
+        giants = rng.choice(n, size=max(1, n // 25), replace=False)
+        new[giants] = rng.integers(4096, 8192, size=giants.size)
+        return [Request(rid=i, arrival=0.0,
+                        prompt_len=int(rng.integers(64, 1024)),
+                        max_new_tokens=int(new[i])) for i in range(n)]
+    if kind == "zipf":
+        new = np.minimum(16 * rng.zipf(1.4, size=n), 8192)
+        return [Request(rid=i, arrival=0.0,
+                        prompt_len=int(rng.integers(64, 1024)),
+                        max_new_tokens=int(new[i])) for i in range(n)]
+    if kind == "bursty":
+        new = rng.integers(16, 64, size=n).astype(np.int64)
+        giants = rng.choice(n, size=max(1, n // 25), replace=False)
+        new[giants] = rng.integers(4096, 8192, size=giants.size)
+        burst_t = np.sort(rng.uniform(0.0, 0.5, size=max(1, n // 100)))
+        which = rng.integers(0, burst_t.size, size=n)
+        return [Request(rid=i, arrival=float(burst_t[which[i]]),
+                        prompt_len=int(rng.integers(64, 1024)),
+                        max_new_tokens=int(new[i])) for i in range(n)]
+    raise ValueError(f"unknown traffic kind {kind!r}; known: "
+                     "uniform, heavy_tail, spiky, zipf, bursty")

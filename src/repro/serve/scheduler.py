@@ -94,6 +94,12 @@ class RequestScheduler:
         reset the technique: adaptive state survives idle gaps (and keeps
         receiving late complete() reports) until the next plan inherits
         it.
+
+        A worker pulling twice without an intervening ``complete()`` folds
+        the grants: the outstanding grant grows by the new take, so the
+        eventual measurement — which by construction covers the service
+        time of *both* chunks — is attributed to the combined size instead
+        of silently dropping the first chunk from the telemetry.
         """
         if not self._pending:
             return []
@@ -107,7 +113,12 @@ class RequestScheduler:
         out = self._pending[:take]
         del self._pending[:take]
         self._assigned[worker].extend(out)
-        self._outstanding[worker] = dataclasses.replace(grant, size=take)
+        prev = self._outstanding.get(worker)
+        if prev is None:
+            self._outstanding[worker] = dataclasses.replace(grant, size=take)
+        else:
+            self._outstanding[worker] = dataclasses.replace(
+                prev, size=prev.size + take)
         return out
 
     def complete(self, worker: int, elapsed: float) -> None:
@@ -138,19 +149,56 @@ class RequestScheduler:
 def simulate_serving(requests: list[Request], num_workers: int,
                      technique: Union[ScheduleSpec, str] = "fac2",
                      chunk_param: Optional[int] = None,
-                     worker_speed: Optional[np.ndarray] = None) -> dict:
+                     worker_speed: Optional[np.ndarray] = None,
+                     worker_free_at: Optional[np.ndarray] = None,
+                     scheduler: Optional[RequestScheduler] = None,
+                     return_completions: bool = False) -> dict:
     """Event-driven serving simulation: returns latency stats.
 
     Workers process their assigned chunk sequentially (a chunk == one
     continuous batch refill).  Used to reproduce the paper's load-balance
-    findings at the serving layer (benchmarks/serving_balance.py).
+    findings at the serving layer (benchmarks/framework_bench.py) and as
+    the per-replica lower level of ``simulate_cluster``
+    (serve/cluster.py).
+
+    ``worker_busy`` is *service* time per worker (cost x speed of the
+    requests it served in this call); idle time waiting for an arrival is
+    excluded — both from the stats and from the ``complete()``
+    measurement fed to adaptive techniques, so a worker that merely
+    waited on a sparse arrival stream is not mistaken for a slow one.
+    ``worker_finish`` has the raw finish timestamps (busy + idle).
+
+    Continuation hooks (how the cluster layer runs one replica across
+    many node-level chunks):
+
+      * ``worker_free_at`` — initial worker clocks; the simulation runs
+        in absolute time from there (arrivals keep their frame);
+      * ``scheduler`` — an existing ``RequestScheduler`` to reuse, so
+        intra-node adaptive state (AWF/AF weights) persists across
+        calls; ``technique``/``chunk_param`` are ignored when given;
+      * ``drain_time`` in the stats — the timestamp at which the backlog
+        emptied (the last admission pull), i.e. when a replica would
+        request its next node-sized chunk;
+      * ``return_completions=True`` adds ``completions``: ``(rid,
+        finish_time)`` per served request.
+
+    An empty request list returns a well-defined all-zero stats dict
+    (same keys) instead of NaN-propagating through ``mean``/``percentile``.
     """
-    sched = RequestScheduler(num_workers=num_workers, technique=technique,
-                             chunk_param=chunk_param)
+    if scheduler is not None and scheduler.num_workers != num_workers:
+        raise ValueError(f"scheduler has {scheduler.num_workers} workers, "
+                         f"expected {num_workers}")
+    sched = scheduler if scheduler is not None else RequestScheduler(
+        num_workers=num_workers, technique=technique,
+        chunk_param=chunk_param)
     speed = np.ones(num_workers) if worker_speed is None else worker_speed
     for r in sorted(requests, key=lambda r: r.arrival):
         sched.submit(r)
-    free_at = np.zeros(num_workers)
+    free_at = (np.zeros(num_workers) if worker_free_at is None
+               else np.asarray(worker_free_at, dtype=np.float64).copy())
+    start_at = free_at.copy()
+    busy = np.zeros(num_workers)
+    drain_time = float(free_at.min())
     done: list[tuple[Request, float]] = []
     # all requests pre-arrived (batch regime): workers repeatedly pull.
     # pull() drains the backlog to empty (it re-plans internally), so an
@@ -160,20 +208,43 @@ def simulate_serving(requests: list[Request], num_workers: int,
         chunk = sched.pull(w)
         if not chunk:
             break
+        if sched.backlog == 0:
+            drain_time = float(free_at[w])
         t = free_at[w]
+        chunk_busy = 0.0
         for r in chunk:
-            t = max(t, r.arrival) + r.cost * speed[w]
+            service = r.cost * speed[w]
+            t = max(t, r.arrival) + service
+            chunk_busy += service
             done.append((r, t))
-        sched.complete(w, elapsed=t - free_at[w])
+        # busy time only: t - free_at[w] would also count idle waiting
+        # for r.arrival, making waits look like slow service and shrinking
+        # the worker's AWF/AF chunks for no reason
+        sched.complete(w, elapsed=chunk_busy)
+        busy[w] += chunk_busy
         free_at[w] = t
+    if not done:
+        out = dict(n=0, makespan=float(free_at.max()), mean_latency=0.0,
+                   p50=0.0, p99=0.0, worker_busy=busy.tolist(),
+                   worker_finish=free_at.tolist(), imbalance=0.0,
+                   drain_time=drain_time)
+        if return_completions:
+            out["completions"] = []
+        return out
     lat = np.array([t - r.arrival for r, t in done])
-    return dict(
+    span = float(free_at.max() - start_at.min())
+    out = dict(
         n=len(done),
         makespan=float(free_at.max()),
         mean_latency=float(lat.mean()),
         p50=float(np.percentile(lat, 50)),
         p99=float(np.percentile(lat, 99)),
-        worker_busy=free_at.tolist(),
+        worker_busy=busy.tolist(),
+        worker_finish=free_at.tolist(),
         imbalance=float((free_at.max() - free_at.mean())
-                        / max(free_at.max(), 1e-9)),
+                        / max(span, 1e-9)),
+        drain_time=drain_time,
     )
+    if return_completions:
+        out["completions"] = [(r.rid, t) for r, t in done]
+    return out

@@ -1,0 +1,249 @@
+"""Two-level cluster scheduling (serve/cluster.py) + the serving-path
+regression sweep that rode along with it: empty-stream stats, busy-time
+telemetry, grant folding, and the cross-node invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import LoopRecorder
+from repro.serve.cluster import (
+    ClusterRouter,
+    TwoLevelSpec,
+    cluster_grid,
+    make_traffic,
+    simulate_cluster,
+    simulate_cluster_batch,
+)
+from repro.serve.scheduler import Request, RequestScheduler, simulate_serving
+
+
+def _req(rid, cost_tokens=100, arrival=0.0):
+    return Request(rid=rid, arrival=arrival, prompt_len=0,
+                   max_new_tokens=cost_tokens)
+
+
+# -- serving-path regressions --------------------------------------------------
+
+
+def test_simulate_serving_empty_requests():
+    """Regression: an empty stream must return a well-defined zero-stats
+    dict, not raise / NaN out of mean()/percentile()."""
+    r = simulate_serving([], num_workers=4, technique="fac2")
+    assert r["n"] == 0
+    assert r["makespan"] == 0.0
+    assert r["mean_latency"] == 0.0 and r["p50"] == 0.0 and r["p99"] == 0.0
+    assert r["imbalance"] == 0.0
+    assert r["worker_busy"] == [0.0] * 4
+    r2 = simulate_serving([], num_workers=2, technique="awf_c",
+                          return_completions=True)
+    assert r2["completions"] == []
+
+
+def test_simulate_serving_busy_time_excludes_arrival_idle():
+    """Regression: worker_busy (and the complete() measurement) must be
+    service time only — a worker waiting on a late arrival is idle, not
+    slow.  Before the fix, busy was the finish timestamp including the
+    wait."""
+    # one worker, one request arriving late: busy == cost, not arrival+cost
+    reqs = [_req(0, cost_tokens=1000, arrival=5.0)]
+    r = simulate_serving(reqs, num_workers=1, technique="ss")
+    cost = reqs[0].cost
+    assert r["worker_busy"][0] == pytest.approx(cost)
+    assert r["worker_finish"][0] == pytest.approx(5.0 + cost)
+    assert r["makespan"] == pytest.approx(5.0 + cost)
+    # across a bursty stream the busy total is exactly the service total
+    rng = np.random.default_rng(0)
+    reqs = [_req(i, cost_tokens=int(rng.integers(10, 500)),
+                 arrival=float(rng.uniform(0, 3)))
+            for i in range(100)]
+    r = simulate_serving(reqs, num_workers=4, technique="fac2")
+    assert np.sum(r["worker_busy"]) == pytest.approx(
+        sum(q.cost for q in reqs))
+
+
+def test_simulate_serving_adaptive_not_fooled_by_bursts():
+    """With equal worker speeds and bursty arrivals, AWF weights must
+    stay ~uniform: idle waits are no longer reported as service time."""
+    rng = np.random.default_rng(1)
+    sched = RequestScheduler(num_workers=2, technique="awf_c",
+                             chunk_param=1)
+    reqs = [_req(i, cost_tokens=100, arrival=float(rng.uniform(0, 2)))
+            for i in range(200)]
+    simulate_serving(reqs, num_workers=2, scheduler=sched)
+    w = sched._tech.weights
+    np.testing.assert_allclose(w, np.ones(2), rtol=1e-6)
+
+
+def test_pull_twice_folds_outstanding_grant():
+    """Regression: a worker pulling twice without complete() used to drop
+    the first grant from telemetry; now the grants fold and the next
+    measurement covers the combined size."""
+    # awf_b: the telemetry window survives until the next batch
+    # boundary, so the folded sizes are observable after complete()
+    sched = RequestScheduler(num_workers=2, technique="awf_b",
+                             chunk_param=1)
+    for i in range(40):
+        sched.submit(_req(i))
+    a = sched.pull(0)
+    b = sched.pull(0)  # no complete() in between
+    assert a and b
+    sched.complete(0, elapsed=float(len(a) + len(b)))
+    tech = sched._tech
+    assert tech._sum_size[0] == pytest.approx(len(a) + len(b))
+    assert tech._sum_time[0] == pytest.approx(len(a) + len(b))
+    # after the fold is consumed, the outstanding slot is clear again
+    assert 0 not in sched._outstanding
+
+
+def test_simulate_serving_continuation_hooks():
+    """worker_free_at shifts the frame; a persistent scheduler keeps
+    adaptive state; drain_time marks the last admission pull."""
+    reqs = [_req(i, cost_tokens=100) for i in range(10)]
+    base = simulate_serving(reqs, num_workers=2, technique="ss")
+    shifted = simulate_serving(reqs, num_workers=2, technique="ss",
+                               worker_free_at=np.array([3.0, 3.0]))
+    assert shifted["makespan"] == pytest.approx(base["makespan"] + 3.0)
+    assert np.sum(shifted["worker_busy"]) == pytest.approx(
+        np.sum(base["worker_busy"]))
+    assert base["drain_time"] <= base["makespan"]
+    sched = RequestScheduler(num_workers=2, technique="awf_c")
+    simulate_serving(reqs, num_workers=2, scheduler=sched)
+    before = sched._tech._wap_den.copy()
+    simulate_serving([_req(100 + i) for i in range(10)], num_workers=2,
+                     scheduler=sched)
+    assert np.all(sched._tech._wap_den >= before)
+
+
+# -- two-level invariants ------------------------------------------------------
+
+
+@pytest.mark.parametrize("node", ["static", "ss,4", "gss", "fac2", "awf_b"])
+def test_cluster_serves_every_request_exactly_once(node):
+    reqs = make_traffic("spiky", n=200, seed=3)
+    r = simulate_cluster(reqs, num_replicas=4, workers_per_replica=2,
+                         schedule=f"{node}/fac2", return_completions=True)
+    rids = sorted(rid for rid, _ in r["completions"])
+    assert rids == sorted(q.rid for q in reqs)  # exactly once, all served
+    assert r["n"] == len(reqs)
+
+
+def test_cluster_totals_equal_replica_records():
+    reqs = make_traffic("heavy_tail", n=300, seed=4)
+    r = simulate_cluster(reqs, num_replicas=4, workers_per_replica=4,
+                         schedule="fac2/fac2")
+    assert sum(r["replica_requests"]) == len(reqs)
+    assert r["makespan"] == pytest.approx(max(r["replica_finish"]))
+    # per-slot busy x slots sums to the total service time of the stream
+    assert np.sum(r["replica_busy"]) * 4 == pytest.approx(
+        sum(q.cost for q in reqs))
+    assert r["node_chunks"] >= 4
+
+
+def test_cluster_record_feeds_loop_recorder():
+    recorder = LoopRecorder()
+    reqs = make_traffic("uniform", n=120, seed=5)
+    for _ in range(2):
+        simulate_cluster(reqs, num_replicas=4, workers_per_replica=2,
+                         schedule="gss/fac2", recorder=recorder)
+    assert len(recorder.records) == 2
+    rec = recorder.records[1]
+    assert rec.loop == "cluster"
+    assert rec.instance == 1  # next_instance kept it monotone
+    assert rec.technique == "gss/fac2"
+    assert rec.p == 4
+    assert rec.t_par == pytest.approx(max(rec.thread_finish))
+    assert 0.0 <= rec.cov
+    summary = recorder.summary()
+    assert summary[0]["instances"] == 2
+
+
+def test_cluster_awf_weights_learn_replica_speeds():
+    """Node-level AWF weights converge toward replica speed ratios under
+    heterogeneity: a 2x-slower replica ends near half the mean weight
+    (the paper's weighted-factoring fixed point w = P * inv / sum(inv))."""
+    speed = np.array([2.0, 1.0, 1.0, 1.0])
+    router = ClusterRouter(4, schedule="awf_c")
+    for wave in range(5):
+        r = simulate_cluster(make_traffic("uniform", n=200, seed=20 + wave),
+                             num_replicas=4, workers_per_replica=2,
+                             schedule="awf_c/fac2", replica_speed=speed,
+                             router=router)
+    w = np.asarray(r["node_weights"])
+    expect = 4.0 * (1.0 / speed) / (1.0 / speed).sum()
+    np.testing.assert_allclose(w, expect, rtol=0.15)
+    # and the slow replica was handed proportionally fewer requests
+    assert r["replica_requests"][0] < min(r["replica_requests"][1:])
+
+
+def test_cluster_dynamic_beats_static_on_skew_not_on_uniform():
+    spiky = make_traffic("spiky", n=600, seed=1)
+    st = simulate_cluster(spiky, 8, 4, schedule="static/fac2")
+    dy = simulate_cluster(spiky, 8, 4, schedule="fac2/fac2")
+    assert st["makespan"] > 1.2 * dy["makespan"]
+    assert dy["cross_node_pi"] < st["cross_node_pi"]
+    uni = make_traffic("uniform", n=600, seed=1)
+    st_u = simulate_cluster(uni, 8, 4, schedule="static/fac2")
+    dy_u = simulate_cluster(uni, 8, 4, schedule="ss,4/fac2")
+    assert st_u["makespan"] <= 1.05 * dy_u["makespan"]
+
+
+def test_cluster_empty_requests():
+    r = simulate_cluster([], num_replicas=4, workers_per_replica=2,
+                         schedule="fac2/fac2")
+    assert r["n"] == 0
+    assert r["makespan"] == 0.0
+    assert r["mean_latency"] == 0.0
+    assert r["node_chunks"] == 0
+
+
+def test_cluster_validates_shapes():
+    with pytest.raises(ValueError, match="replica_speed"):
+        simulate_cluster(make_traffic("uniform", n=10), num_replicas=4,
+                         replica_speed=[1.0, 2.0])
+    with pytest.raises(ValueError, match="replicas"):
+        simulate_cluster(make_traffic("uniform", n=10), num_replicas=4,
+                         router=ClusterRouter(2))
+    # a reused router must carry the node schedule the caller asked for —
+    # a mismatch would mislabel every record downstream
+    with pytest.raises(ValueError, match="node schedule"):
+        simulate_cluster(make_traffic("uniform", n=10), num_replicas=2,
+                         schedule="fac2/fac2",
+                         router=ClusterRouter(2, schedule="gss"))
+    with pytest.raises(ValueError, match="workers"):
+        simulate_serving(make_traffic("uniform", n=10), num_workers=4,
+                         scheduler=RequestScheduler(num_workers=2))
+    with pytest.raises(ValueError):
+        ClusterRouter(0)
+    with pytest.raises(ValueError, match="unknown traffic"):
+        make_traffic("nope")
+
+
+def test_two_level_spec_parse():
+    s = TwoLevelSpec.parse("awf_b,4/ss,8")
+    assert s.node.technique == "awf_b" and s.node.chunk_param == 4
+    assert s.thread.technique == "ss" and s.thread.chunk_param == 8
+    assert str(s) == "awf_b,4/ss,8"
+    assert TwoLevelSpec.parse(s) is s
+    bare = TwoLevelSpec.parse("gss")
+    assert bare.node.technique == "gss"
+    assert bare.thread.technique == "fac2"
+    with pytest.raises(KeyError):
+        TwoLevelSpec.parse("no_such/fac2")
+
+
+def test_cluster_grid_and_batch_dedup():
+    traffic = {"a": make_traffic("uniform", n=60, seed=0),
+               "b": make_traffic("spiky", n=60, seed=0)}
+    configs = cluster_grid(["static/fac2", "ss,4/fac2"], traffic,
+                           num_replicas=2, workers_per_replica=2)
+    assert len(configs) == 4
+    assert [c.traffic for c in configs] == ["a", "a", "b", "b"]
+    # duplicated grid points share one simulation result
+    results = simulate_cluster_batch(configs + configs)
+    assert len(results) == 8
+    for i in range(4):
+        lhs, rhs = results[i], results[i + 4]
+        assert lhs["makespan"] == rhs["makespan"]
+        assert lhs["replica_requests"] == rhs["replica_requests"]
+    assert results[0]["traffic"] == "a"
+    assert all(r["n"] == 60 for r in results)

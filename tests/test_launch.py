@@ -148,6 +148,28 @@ def test_make_production_mesh_shapes():
         assert m.shape == {"pod": 2, "data": 16, "model": 16}
 
 
+def test_replica_submeshes_partition_data_axis():
+    """Replica = data-parallel submesh: the split covers every device
+    exactly once, keeps axis names, and rejects non-dividing counts."""
+    from repro.launch.mesh import make_host_mesh, replica_submeshes
+
+    mesh = make_host_mesh()
+    n = mesh.devices.shape[0]
+    subs = replica_submeshes(mesh, n)
+    assert len(subs) == n
+    seen = []
+    for sub in subs:
+        assert sub.axis_names == mesh.axis_names
+        assert sub.devices.shape == (1,) + mesh.devices.shape[1:]
+        seen.extend(sub.devices.flat)
+    assert sorted(d.id for d in seen) == sorted(
+        d.id for d in mesh.devices.flat)
+    with pytest.raises(ValueError, match="does not split"):
+        replica_submeshes(mesh, 2 * n + 1)
+    with pytest.raises(ValueError):
+        replica_submeshes(mesh, 0)
+
+
 # --- kv8 decode consistency --------------------------------------------------
 
 

@@ -152,6 +152,21 @@ def test_next_instance_counts_per_loop():
     assert rec.next_instance("C") == 0
 
 
+def test_next_instance_counter_scales_without_rescans():
+    """Regression for the O(n^2) scan: next_instance is backed by a
+    per-loop counter kept in add(), so it stays correct (and O(1)) over
+    long serving/cluster runs that emit one record per admission."""
+    rec = LoopRecorder()
+    for i in range(500):
+        rec.add(_rec(loop=f"loop{i % 3}", instance=rec.next_instance(
+            f"loop{i % 3}")))
+    assert rec.next_instance("loop0") == 167
+    assert rec.next_instance("loop1") == 167
+    assert rec.next_instance("loop2") == 166
+    assert [r.instance for r in rec.records if r.loop == "loop1"] == list(
+        range(167))
+
+
 def test_record_replace_keeps_metrics_consistent():
     r = _rec(times=(2.0, 2.0))
     r2 = dataclasses.replace(r, thread_times=np.array([1.0, 3.0]))
