@@ -1,0 +1,164 @@
+"""Event-vs-batch engine timing on the adaptive campaign grid.
+
+The paper's central empirical claim is about the adaptive techniques'
+overhead/benefit trade-off — which makes AWF-B/C/D/E, AF/mAF, BOLD (and
+worker-dependent WF2) the band a selection campaign sweeps hardest, and
+(before the lockstep band) the only band still stepping the event oracle
+one heapq event at a time.  This benchmark measures the same adaptive
+technique x workload x chunk-param x repetition grid twice — once per
+config through the discrete-event oracle, once through
+``repro.core.simulate_batch``'s config-parallel lockstep band — verifies
+bit-for-bit agreement AND that no config fell back to the oracle, and
+records the wall-clock ratio under benchmarks/results/ so the perf
+trajectory accumulates run over run.
+
+    PYTHONPATH=src python -m benchmarks.adaptive_bench \
+        [--quick] [--reps N] [--min-speedup X]
+
+The grid uses timesteps=2 so the adaptive state genuinely carries across
+instances (plain AWF only adapts at time-step boundaries), and a
+repetition-seed axis mirroring the paper's statistical protocol — the
+regime the engine is built for: the seed axis dedups (adaptive
+techniques never read the seed) and the remaining lanes advance in
+vectorized lockstep rounds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+from repro.core import (
+    NOISY_PROFILE,
+    batch_grid,
+    dist_loop,
+    gromacs_like,
+    nab_like,
+    simulate,
+    simulate_batch,
+    sphynx_like,
+)
+
+from .common import RESULTS
+
+P = 20
+TIMESTEPS = 2
+
+#: the adaptive band: every technique the plan-precompute path cannot
+#: cover (adaptive or worker-dependent), all carrying step_batch forms
+ADAPTIVE_TECHS = ("awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
+                  "bold", "wf2")
+
+
+def campaign_grid(n: int = 100_000, reps: int = 10):
+    """Adaptive-only campaign: band x 4 loop classes x 3 cps x reps
+    (the multi-chunk-param sweep of the paper's Sec. 4 protocol)."""
+    loops = [sphynx_like(n=n), gromacs_like(n=n),
+             dist_loop("L1", n=max(n // 100, 100)), nab_like()]
+    return batch_grid(ADAPTIVE_TECHS, loops, ps=(P,),
+                      chunk_params=(None, 16, 64),
+                      seeds=tuple(range(reps)),
+                      chunk_cold_cost=2e-6, timesteps=TIMESTEPS)
+
+
+def run(n: int = 100_000, reps: int = 10) -> dict:
+    configs = campaign_grid(n=n, reps=reps)
+
+    # warm both engines on a tiny grid so neither side pays the one-off
+    # import/allocator cost inside its timed region
+    warm = campaign_grid(n=500, reps=1)
+    simulate_batch(warm, profile=NOISY_PROFILE)
+    for c in warm:
+        simulate(c.technique, c.workload, c.p, c.chunk_param, seed=c.seed,
+                 timesteps=c.timesteps, chunk_cold_cost=c.chunk_cold_cost,
+                 profile=NOISY_PROFILE)
+
+    t0 = time.perf_counter()
+    batch = simulate_batch(configs, profile=NOISY_PROFILE)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    event = [
+        simulate(c.technique, c.workload, c.p, c.chunk_param, seed=c.seed,
+                 timesteps=c.timesteps, chunk_cold_cost=c.chunk_cold_cost,
+                 profile=NOISY_PROFILE)
+        for c in configs
+    ]
+    t_event = time.perf_counter() - t0
+
+    mismatches = sum(
+        rb.record.t_par != re_.record.t_par
+        for b, e in zip(batch, event) for rb, re_ in zip(b, e))
+    # a SimResult off the lockstep band carries no live technique
+    # instance — any non-None marks an event-oracle fallback
+    oracle_fallbacks = sum(
+        res.technique is not None for b in batch for res in b)
+    return dict(
+        name="adaptive_speedup/campaign",
+        grid_configs=len(configs),
+        techniques=len(ADAPTIVE_TECHS),
+        workloads=4,
+        chunk_params=3,
+        reps=reps,
+        timesteps=TIMESTEPS,
+        n=n,
+        p=P,
+        t_event_s=round(t_event, 3),
+        t_batch_s=round(t_batch, 3),
+        speedup=round(t_event / t_batch, 1),
+        agreement_mismatches=mismatches,
+        oracle_fallbacks=oracle_fallbacks,
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    )
+
+
+def rows(n: int = 100_000, reps: int = 10) -> list[dict]:
+    """benchmarks.run entry point (name,us_per_call,derived rows)."""
+    r = run(n=n, reps=reps)
+    r["us_per_call"] = r["t_batch_s"] * 1e6 / max(r["grid_configs"], 1)
+    return [r]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI (writes adaptive_quickbench"
+                         ".json and gates on --min-speedup)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="repetitions per config (default 10, quick 4)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail unless batch/event speedup >= this "
+                         "(default: 5.0 under --quick, no gate otherwise)")
+    args = ap.parse_args()
+    reps = args.reps if args.reps is not None else (4 if args.quick else 10)
+    n = 20_000 if args.quick else 100_000
+    floor = args.min_speedup
+    if floor is None and args.quick:
+        floor = 5.0
+    result = run(n=n, reps=reps)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / ("adaptive_quickbench.json" if args.quick
+                     else "adaptive_speedup.json")
+    history = []
+    if out.exists():
+        prev = json.loads(out.read_text())
+        history = prev if isinstance(prev, list) else [prev]
+    history.append(result)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(result, indent=2))
+    if result["agreement_mismatches"]:
+        raise SystemExit("adaptive band disagrees with the event oracle")
+    if result["oracle_fallbacks"]:
+        raise SystemExit("adaptive configs fell back to the event oracle")
+    if floor is not None and result["speedup"] < floor:
+        raise SystemExit(
+            f"adaptive-band speedup {result['speedup']}x is below the "
+            f"{floor}x floor")
+
+
+if __name__ == "__main__":
+    main()

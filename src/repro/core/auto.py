@@ -28,13 +28,32 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from .batch_sim import BatchConfig, simulate_batch
-from .schedule import ScheduleSpec, resolve
+from .schedule import REGISTRY, ScheduleSpec, resolve
 from .simulator import OverheadModel, ProfileModel, EXACT_PROFILE, simulate
 from .workloads import Workload
 
-__all__ = ["AutoSelector", "auto_simulate"]
+__all__ = ["AutoSelector", "auto_simulate", "registry_candidates"]
 
 DEFAULT_CANDIDATES = ("static", "gss", "fac2", "awf_b", "af", "maf", "ss")
+
+
+def registry_candidates(chunk_param: Optional[int] = None,
+                        exclude: Sequence[str] = ()) -> tuple:
+    """Every registered technique as an ``AutoSelector`` arm.
+
+    With the batch engine's lockstep band covering the adaptive family,
+    evaluating the *full* portfolio is cheap — ``auto_simulate(...,
+    engine="batch")`` runs the whole exploration grid vectorized, so
+    selection studies (cf. "A Comparative Study of OpenMP Scheduling
+    Algorithm Selection Strategies") no longer need to prune adaptive
+    arms for wall-clock reasons.  ``chunk_param`` (when given) is applied
+    to every arm; ``exclude`` drops techniques by name.
+    """
+    skip = {e.lower().replace("-", "_") for e in exclude}
+    return tuple(
+        ScheduleSpec(technique=n) if chunk_param is None
+        else ScheduleSpec(technique=n, chunk_param=chunk_param)
+        for n in REGISTRY if n not in skip)
 
 
 @dataclasses.dataclass
@@ -161,7 +180,10 @@ def auto_simulate(
     prefix for both policies, plus (for explore_commit) the entire
     committed tail.  Results are identical to ``engine="event"`` — the
     batch engine agrees with the oracle and the arm sequence and per-step
-    seeds are replayed exactly; only the wall-clock changes.  UCB's
+    seeds are replayed exactly; only the wall-clock changes.  Adaptive
+    arms (AWF*/AF/mAF/BOLD, WF2) run on the lockstep band, so a full-
+    registry selector (:func:`registry_candidates`) is evaluated entirely
+    through the fast path — no event-oracle fallback.  UCB's
     post-exploration steps stay sequential (each choice depends on the
     previous rewards).
 

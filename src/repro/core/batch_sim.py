@@ -31,16 +31,27 @@ evaluations, and the property tests that grind through the registry.
      and the FAC mutex critical section are modelled bit-identically to
      the event loop.
 
-Adaptive / worker-dependent techniques (AWF*/AF/mAF/BOLD, WF2) and
-rng-taking ``perturb(ts, worker, rng)`` callbacks cannot be pre-planned
-— their chunk sizes depend on who requests and what was measured — so
-those configs fall back to the event-driven oracle, keeping
-``simulate_batch`` exact across the entire registry.  (A 2-argument
-``perturb(ts, worker)`` is assumed to be a pure function — the same
-contract `simulate`'s docstring states — since impurity is not
-detectable from the signature.)  Agreement (t_par, per-thread finish times, chunk
-counts) is property-tested in tests/test_batch_sim.py; the campaign
-speedup is tracked by benchmarks/batch_bench.py.
+Adaptive / worker-dependent techniques (AWF*/AF/mAF/BOLD, WF2) cannot be
+pre-planned — their chunk sizes depend on who requests and what was
+measured — but they *can* be vectorized: the event oracle feeds each
+chunk's measurement back in request order, so the whole adaptive
+calculus is a deterministic per-chunk recurrence.  The **lockstep band**
+(:func:`_run_lockstep_band`) advances all lanes of one technique chunk-
+round by chunk-round, with the per-lane weight/timing state held as
+dense ``(L,)`` / ``(L, p)`` arrays and the technique-specific updates
+supplied by the vectorized ``step_batch`` forms registered alongside the
+GraphForms in `core/schedule.py` (see
+:class:`repro.core.techniques.BatchTechnique`).  Only prebuilt
+``Technique`` instances, rng-taking ``perturb(ts, worker, rng)``
+callbacks, and plugins without a ``step_batch`` form fall back to the
+event-driven oracle, keeping ``simulate_batch`` exact across the entire
+registry.  (A 2-argument ``perturb(ts, worker)`` is assumed to be a pure
+function — the same contract `simulate`'s docstring states — since
+impurity is not detectable from the signature.)  Agreement (t_par,
+per-thread finish times, chunk counts) is property-tested in
+tests/test_batch_sim.py; the campaign speedup is tracked by
+benchmarks/batch_bench.py (non-adaptive grid) and
+benchmarks/adaptive_bench.py (adaptive grid).
 """
 
 from __future__ import annotations
@@ -546,6 +557,206 @@ def _run_band_chunkwise(lanes: list[_Lane], numa: bool):
 
 
 # ---------------------------------------------------------------------------
+# Lockstep band — adaptive / worker-dependent techniques, vectorized
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ALane:
+    """One config on the lockstep (adaptive) band.
+
+    Unlike the fast band's :class:`_Lane` (one lane per (config,
+    timestep)), an adaptive lane spans *all* its timesteps: AWF/AF/BOLD
+    state carries across ``begin_instance`` boundaries, so instances must
+    run sequentially per config — the vectorization axis is the configs.
+    """
+
+    config_idx: int
+    cfg: BatchConfig
+    spec: ScheduleSpec
+    kw: dict
+    overhead: OverheadModel
+
+
+def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
+    """Advance every adaptive lane chunk-round by chunk-round,
+    bit-identically to the event-driven oracle.
+
+    The oracle's event loop feeds ``complete_chunk`` immediately after
+    each grant (the measurement is computed at request time), so the
+    adaptive state is a deterministic recurrence over the per-lane chunk
+    sequence — and since lanes share no state, stepping every lane's
+    k-th chunk in one NumPy round reproduces each lane's event order
+    exactly.  Per round: pop the (ready, tiebreak)-least worker per
+    lane, ask each group's ``step_batch`` machine for the thresholded
+    chunk sizes, clamp, update the factoring/adaptive bookkeeping
+    (``granted``), charge the atomic-path scheduling + execution costs
+    with the same float64 operand order as the oracle, and feed the
+    measurement back (``complete``).
+
+    ``groups`` partitions the lanes by (technique, p): each group owns
+    one vectorized machine whose state arrays are exactly (Lg, p) — the
+    condition for NumPy's pairwise reductions to match the scalar
+    reference — while the *engine* arithmetic (worker pop, execution
+    cost, clock/telemetry scatters) runs once per round over the union
+    of all alive lanes, padded to the band-wide max p.  That split is
+    what makes the band fast: the per-round Python/NumPy dispatch cost
+    amortizes over every adaptive config in the grid, not one
+    technique's slice of it.
+
+    Returns per-lane lists of per-instance
+    ``(busy, sched, finish, n_chunks, chunks)`` tuples.
+    """
+    lanes = [lane for group in groups for lane in group]
+    L = len(lanes)
+    G = len(groups)
+    pmax = max(l.cfg.p for l in lanes)
+    pvec = np.asarray([l.cfg.p for l in lanes], np.int64)
+    n = np.asarray([l.cfg.workload.n for l in lanes], np.int64)
+    g_start = np.zeros(G, np.int64)  # first global lane id per group
+    machines = []
+    off = 0
+    for gi, group in enumerate(groups):
+        g_start[gi] = off
+        off += len(group)
+        machines.append(group[0].spec.entry.step_batch(
+            n=[l.cfg.workload.n for l in group], p=group[0].cfg.p,
+            chunk_param=[l.spec.chunk_param for l in group],
+            kws=[l.kw for l in group]))
+
+    # flat concatenated cost prefix sums (shared per unique workload)
+    offs = np.zeros(L, np.int64)
+    parts: list[np.ndarray] = []
+    seen: dict[int, int] = {}
+    total = 0
+    for li, l in enumerate(lanes):
+        wkl = l.cfg.workload
+        coff = seen.get(id(wkl))
+        if coff is None:
+            csum = np.concatenate([[0.0], np.cumsum(wkl.costs)])
+            seen[id(wkl)] = coff = total
+            parts.append(csum)
+            total += len(csum)
+        offs[li] = coff
+    csum_flat = np.concatenate(parts)
+
+    cold = np.asarray([l.cfg.chunk_cold_cost for l in lanes])
+    sconst = np.asarray([
+        (l.overhead.o_dispatch + l.overhead.sync_cost(l.spec.meta.sync))
+        + l.overhead.calc_cost(l.spec.meta.o_cs) for l in lanes])
+    pen = np.asarray([l.cfg.numa_penalty for l in lanes])
+    use_numa = bool((pen > 0.0).any())
+    if use_numa:
+        bounds = np.zeros((L, pmax + 1), np.int64)
+        for li, l in enumerate(lanes):
+            bounds[li, :pvec[li] + 1] = np.linspace(
+                0, l.cfg.workload.n, pvec[li] + 1).astype(np.int64)
+    tb_base = n.astype(np.float64)
+    tsteps = np.asarray([l.cfg.timesteps for l in lanes], np.int64)
+
+    out: list[list] = [[] for _ in range(L)]
+    for ts in range(int(tsteps.max())):
+        galive: list[np.ndarray] = []  # per-group alive global lane ids
+        for gi, group in enumerate(groups):
+            act = np.flatnonzero(tsteps[g_start[gi]:g_start[gi]
+                                        + len(group)] > ts)
+            machines[gi].begin_instance(ts, act)
+            galive.append(act + g_start[gi])
+        ready = np.full((L, pmax), np.inf)
+        tb = np.tile(np.arange(pmax, dtype=float), (L, 1))
+        busy = np.zeros((L, pmax))
+        sched = np.zeros((L, pmax))
+        scheduled = np.zeros(L, np.int64)
+        reqidx = np.zeros(L, np.int64)
+        speeds = np.ones((L, pmax))
+        for ga in galive:
+            for li in ga:
+                p_l = pvec[li]
+                ready[li, :p_l] = 0.0
+                speeds[li, :p_l] = _lane_speeds(lanes[li].cfg, ts)
+        logs: list[list] = [[] for _ in range(L)]
+        while True:
+            segs = [(gi, ga) for gi, ga in enumerate(galive) if len(ga)]
+            if not segs:
+                break
+            a = (segs[0][1] if len(segs) == 1
+                 else np.concatenate([ga for _, ga in segs]))
+            r = ready[a]
+            t = r.min(axis=1)
+            # heap order: least ready time, then least insertion tiebreak
+            cand = np.where(r == t[:, None], tb[a], np.inf)
+            w = cand.argmin(axis=1)
+            rem = n[a] - scheduled[a]
+            ridx = reqidx[a]
+            size = np.empty(len(a), np.int64)
+            pos = 0
+            for gi, ga in segs:
+                sl = slice(pos, pos + len(ga))
+                size[sl] = machines[gi].sizes(
+                    ga - g_start[gi], w[sl], rem[sl], ridx[sl])
+                pos += len(ga)
+            size = np.maximum(1, np.minimum(size, rem))
+            start = scheduled[a]
+            rem_after = rem - size
+            batch = np.empty(len(a), np.int64) if record_chunks else None
+            pos = 0
+            for gi, ga in segs:
+                sl = slice(pos, pos + len(ga))
+                b = machines[gi].granted(
+                    ga - g_start[gi], w[sl], size[sl], rem_after[sl],
+                    ridx[sl])
+                if record_chunks:
+                    batch[sl] = b
+                pos += len(ga)
+            scheduled[a] += size
+            reqidx[a] += 1
+            idx = offs[a] + start
+            base = csum_flat[idx + size] - csum_flat[idx]
+            if use_numa:
+                hi = start + size
+                local = np.maximum(
+                    np.minimum(hi, bounds[a, w + 1])
+                    - np.maximum(start, bounds[a, w]), 0)
+                base = base * (1.0 + pen[a] * (1.0 - local / size))
+            e = base * speeds[a, w] + cold[a]
+            s = sconst[a]
+            pos = 0
+            for gi, ga in segs:
+                sl = slice(pos, pos + len(ga))
+                machines[gi].complete(ga - g_start[gi], w[sl], size[sl],
+                                      e[sl], s[sl])
+                pos += len(ga)
+            done = t + s + e
+            # ready doubles as the finish log: a worker's clock only ever
+            # moves to its (monotone) chunk completion time, so at
+            # instance end ready[:p] == per-worker finish exactly
+            ready[a, w] = done
+            busy[a, w] += e
+            sched[a, w] += s
+            tb[a, w] = tb_base[a] + reqidx[a]
+            if record_chunks:
+                for j, li in enumerate(a):
+                    logs[li].append(ChunkGrant(
+                        start=int(start[j]), size=int(size[j]),
+                        batch=int(batch[j]), worker=int(w[j])))
+            for gi, ga in segs:
+                fin = scheduled[ga] >= n[ga]
+                if fin.any():
+                    galive[gi] = ga[~fin]
+        for gi, group in enumerate(groups):
+            act = np.flatnonzero(tsteps[g_start[gi]:g_start[gi]
+                                        + len(group)] > ts)
+            machines[gi].end_instance(act)
+            for li in act + g_start[gi]:
+                p_l = pvec[li]
+                out[li].append((busy[li, :p_l].copy(),
+                                sched[li, :p_l].copy(),
+                                ready[li, :p_l].copy(), int(reqidx[li]),
+                                logs[li] if record_chunks else None))
+    return [(lanes[li], out[li]) for li in range(L)]
+
+
+# ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
 
@@ -622,17 +833,21 @@ def simulate_batch(
     Returns one ``list[SimResult]`` per config (one entry per timestep),
     exactly like calling :func:`repro.core.simulate` per config — and
     with identical results: worker-agnostic techniques run on the
-    vectorized fast path, adaptive / worker-dependent ones (and prebuilt
-    ``Technique`` instances or rng-taking 3-arg ``perturb`` callbacks) on
-    the event-driven oracle.  A 2-arg ``perturb(ts, worker)`` must be a
-    pure function (the contract `simulate` documents); the engine cannot
-    detect impurity from the signature.  Grid points that are provably the same run
+    plan-precompute fast path, adaptive / worker-dependent ones with a
+    registered ``step_batch`` form (the whole built-in AWF/AF/mAF/BOLD/
+    WF2 family) on the vectorized lockstep band, and only prebuilt
+    ``Technique`` instances, rng-taking 3-arg ``perturb`` callbacks, and
+    ``step_batch``-less plugins on the event-driven oracle.  A 2-arg
+    ``perturb(ts, worker)`` must be a pure function (the contract
+    `simulate` documents); the engine cannot detect impurity from the
+    signature.  Grid points that are provably the same run
     (e.g. the statistical-repetition seed axis on a technique that never
     reads the seed) are computed once and shared; ``recorder`` still
     receives one record per (config, timestep), in config order.
     """
     results: list[Optional[list[SimResult]]] = [None] * len(configs)
     fast_lanes: list[_Lane] = []
+    step_lanes: list[_ALane] = []
     plan_cache: dict = {}
     memo: dict = {}          # dedup key -> primary config index
     aliases: dict[int, int] = {}  # alias config index -> primary index
@@ -640,21 +855,33 @@ def simulate_batch(
     for ci, cfg in enumerate(configs):
         ov = cfg.overhead if cfg.overhead is not None else overhead
         prof = cfg.profile if cfg.profile is not None else profile
+        band = "oracle"
         if not isinstance(cfg.technique, Technique):
             spec = resolve(cfg.technique, chunk_param=cfg.chunk_param)
+            if cfg.workload.n <= 0 or cfg.p <= 0:
+                # the oracle raises this from Technique.__init__; the
+                # vectorized bands never build a host instance, so the
+                # contract ("identical to per-config simulate") is
+                # enforced here before a band could fabricate a result
+                raise ValueError(
+                    f"need n>0, p>0, got n={cfg.workload.n} p={cfg.p}")
             meta = spec.meta
-            fast = not (meta.adaptive
-                        or getattr(meta, "worker_dependent", False)
-                        or _stateful_perturb(cfg.perturb))
+            if not _stateful_perturb(cfg.perturb):
+                if not (meta.adaptive
+                        or getattr(meta, "worker_dependent", False)):
+                    band = "plan"
+                elif (spec.entry.step_batch is not None
+                      and meta.sync != "mutex"):
+                    # the lockstep band models the atomic request path;
+                    # a mutex-sync step_batch plugin stays on the oracle
+                    band = "lockstep"
             key = _dedup_key(cfg, spec, ov, prof)
             if key is not None:
                 prev = memo.setdefault(key, ci)
                 if prev != ci:
                     aliases[ci] = prev
                     continue
-        else:
-            fast = False
-        if not fast:
+        if band == "oracle":
             results[ci] = simulate(
                 cfg.technique, cfg.workload, cfg.p, cfg.chunk_param,
                 timesteps=cfg.timesteps, speeds=cfg.speeds,
@@ -666,6 +893,11 @@ def simulate_batch(
             continue
         kw = _technique_kwargs(spec, cfg.workload, cfg.p, ov, cfg.weights,
                                prof, seed=cfg.seed)
+        if band == "lockstep":
+            step_lanes.append(_ALane(config_idx=ci, cfg=cfg, spec=spec,
+                                     kw=kw, overhead=ov))
+            results[ci] = [None] * cfg.timesteps  # type: ignore[list-item]
+            continue
         plans = _plans_for(spec, cfg.workload.n, cfg.p, cfg.timesteps, kw,
                            plan_cache)
         for ts in range(cfg.timesteps):
@@ -709,6 +941,35 @@ def simulate_batch(
                 chunks=chunks,
             )
             results[lane.config_idx][lane.instance] = SimResult(record=rec)
+
+    # lockstep (adaptive) band: lanes grouped by (technique, p) — one
+    # vectorized machine per group (reductions over exactly p contiguous
+    # elements), all groups advanced by one merged engine loop
+    groups: dict[tuple[str, int], list[_ALane]] = {}
+    for alane in step_lanes:
+        groups.setdefault((alane.spec.technique, alane.cfg.p),
+                          []).append(alane)
+    if groups:
+        for alane, instances in _run_lockstep_band(list(groups.values()),
+                                                   record_chunks):
+            cfg, spec = alane.cfg, alane.spec
+            for ts, (busy, sched, finish, nchunks, chunks) in \
+                    enumerate(instances):
+                rec = LoopInstanceRecord(
+                    loop=cfg.workload.name,
+                    technique=spec.technique,
+                    instance=ts,
+                    p=cfg.p,
+                    n=cfg.workload.n,
+                    chunk_param=spec.chunk_param,
+                    t_par=float(finish.max()),
+                    thread_times=busy + sched,
+                    thread_finish=finish,
+                    n_chunks=nchunks,
+                    sched_time=float(sched.sum()),
+                    chunks=chunks,
+                )
+                results[alane.config_idx][ts] = SimResult(record=rec)
 
     for ci, prev in aliases.items():
         results[ci] = [_copy_result(r) for r in results[prev]]

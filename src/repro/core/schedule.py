@@ -49,6 +49,7 @@ __all__ = [
     "REGISTRY",
     "register_technique",
     "bind_graph_form",
+    "bind_step_batch",
     "resolve",
 ]
 
@@ -117,12 +118,21 @@ class GraphForm:
 
 @dataclasses.dataclass
 class TechniqueEntry:
-    """One registered technique: host class + graph form + metadata."""
+    """One registered technique: host class + graph form + metadata.
+
+    ``step_batch`` is the vectorized lane-parallel form consumed by the
+    batch engine's lockstep band (`core/batch_sim.py`): a factory
+    ``factory(n, p, chunk_param, kws) -> machine`` advancing L lanes of
+    this technique one chunk round at a time with dense per-lane state
+    (see :class:`repro.core.techniques.BatchTechnique`).  Bound with
+    :func:`bind_step_batch`, next to the in-graph :class:`GraphForm`.
+    """
 
     name: str
     cls: type
     meta: TechniqueSpec
     graph: Optional[GraphForm] = None
+    step_batch: Optional[Callable] = None
     paper_set: bool = False  # one of the paper's 14 LB4OMP additions
 
 
@@ -195,6 +205,19 @@ class TechniqueRegistry(Mapping):
         self[name].graph = GraphForm(builder=builder, next_size=next_size,
                                      batched=batched, max_chunks=max_chunks)
 
+    def bind_step_batch(self, name: str, factory: Callable) -> None:
+        """Attach/replace the vectorized lane-parallel (``step_batch``)
+        form for a registered name.  ``factory(n, p, chunk_param, kws)``
+        must return a machine implementing the ``BatchTechnique``
+        protocol (`repro.core.techniques`); the batch engine routes the
+        technique through its lockstep band instead of the event oracle
+        whenever one is bound (adaptive plugins get the fast path the
+        same way the built-in AWF/AF/BOLD family does)."""
+        if not callable(factory):
+            raise TypeError(f"step_batch factory for {name!r} must be "
+                            f"callable, got {type(factory).__name__}")
+        self[name].step_batch = factory
+
     # -- views ---------------------------------------------------------------
     def class_view(self) -> "ClassView":
         return ClassView(self)
@@ -206,6 +229,12 @@ class TechniqueRegistry(Mapping):
     def graph_names(self) -> tuple[str, ...]:
         """Techniques plannable in-graph (jax_sched's dispatch table)."""
         return tuple(n for n, e in self._entries.items() if e.graph is not None)
+
+    def step_batch_names(self) -> tuple[str, ...]:
+        """Techniques with a vectorized lane-parallel form (the batch
+        engine's lockstep band)."""
+        return tuple(n for n, e in self._entries.items()
+                     if e.step_batch is not None)
 
     # -- construction --------------------------------------------------------
     def create(self, spec: "ScheduleSpec | str", n: int, p: int, **kw):
@@ -283,6 +312,7 @@ REGISTRY = TechniqueRegistry()
 #: (``from repro.core.schedule import register_technique``).
 register_technique = REGISTRY.register
 bind_graph_form = REGISTRY.bind_graph_form
+bind_step_batch = REGISTRY.bind_step_batch
 
 
 _BACKENDS = ("auto", "host", "graph")
@@ -458,6 +488,17 @@ def _chunk_param_semantics(entry: TechniqueEntry) -> str:
     return "exact chunk size" if entry.meta.chunk_exact else "lower bound"
 
 
+def _batch_band(entry: TechniqueEntry) -> str:
+    # the band `simulate_batch` routes this technique through (mirrors
+    # the routing predicate in core/batch_sim.py)
+    m = entry.meta
+    if not (m.adaptive or m.worker_dependent):
+        return "plan precompute"
+    if entry.step_batch is not None and m.sync != "mutex":
+        return "lockstep (step_batch)"
+    return "event oracle"
+
+
 def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
     """Render the technique reference from the live registry.
 
@@ -469,6 +510,7 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
     paper = [e.name for e in entries if e.paper_set]
     graph = [e.name for e in entries if e.graph is not None]
     adaptive = [e.name for e in entries if e.meta.adaptive]
+    stepb = [e.name for e in entries if e.step_batch is not None]
     lines = [
         "# Technique reference",
         "",
@@ -476,20 +518,23 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         "",
         f"{len(entries)} registered techniques "
         f"({len(paper)} in the paper's LB4OMP set, {len(adaptive)} "
-        f"adaptive, {len(graph)} with an in-graph closed form).  Rows are "
+        f"adaptive, {len(graph)} with an in-graph closed form, "
+        f"{len(stepb)} with a vectorized `step_batch` form).  Rows are "
         "in registration order — the portfolio order the paper tables "
         "use.  Aliases: "
         + ", ".join(f"`{a}` -> `{t}`" for a, t in sorted(_ALIASES.items()))
         + ".",
         "",
-        "| technique | host class | planning form | `chunk_param` | "
-        "adaptive | profiling | sync | o_cs | worker-dep | paper set |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "| technique | host class | planning form | batch engine | "
+        "`chunk_param` | adaptive | profiling | sync | o_cs | worker-dep "
+        "| paper set |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.meta
         lines.append(
             f"| `{e.name}` | `{e.cls.__name__}` | {_planning_form(e)} | "
+            f"{_batch_band(e)} | "
             f"{_chunk_param_semantics(e)} | "
             f"{'yes' if m.adaptive else 'no'} | "
             f"{'yes' if m.requires_profiling else 'no'} | "
@@ -509,6 +554,14 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         "builder or a per-request `lax.while_loop` rule (*batched* = the "
         "factoring family, chunk frozen per batch of P requests).  *Host "
         "band* techniques plan through the reference class only.",
+        "- **batch engine** — the band `repro.core.simulate_batch` runs "
+        "the technique on: *plan precompute* (chunk sequence is a pure "
+        "function of the config — materialized up front, stepped in "
+        "vectorized rounds), *lockstep (step_batch)* (adaptive / worker-"
+        "dependent calculus with a vectorized lane-parallel form bound "
+        "via `bind_step_batch` — all lanes advance one chunk round per "
+        "NumPy step), or *event oracle* (one heapq event at a time).  "
+        "All three agree with the discrete-event oracle bit-for-bit.",
         "- **`chunk_param`** — OpenMP chunk parameter: the exact chunk "
         "size for `static`/`ss`, a lower-bound threshold for every other "
         "technique (paper Sec. 3).",

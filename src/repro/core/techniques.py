@@ -47,6 +47,7 @@ from .schedule import (
     REGISTRY,
     ScheduleSpec,
     TechniqueSpec,
+    bind_step_batch,
     register_technique,
     resolve,
 )
@@ -55,6 +56,7 @@ __all__ = [
     "ChunkGrant",
     "Technique",
     "TechniqueSpec",
+    "BatchTechnique",
     "make_technique",
     "register_technique",
     "TECHNIQUES",
@@ -817,6 +819,390 @@ class VISS(FISS):
         return max(1, int(math.ceil(self._c0 * (2.0 - 2.0 ** (-j)))))
 
 
+
+
+# ---------------------------------------------------------------------------
+# Vectorized lane-parallel (step_batch) forms — the batch engine's adaptive
+# band.  One machine advances L lanes (one lane = one simulate() call) of
+# the SAME technique and worker count in lockstep, one chunk round per
+# call, carrying the per-lane weight/timing state as dense (L,) / (L, p)
+# arrays.  Every float64 operation below is written with the exact operand
+# order of the scalar reference class above it, so the batch engine's
+# results agree with the discrete-event oracle bit-for-bit (property-
+# tested in tests/test_batch_sim.py).  Transcendental functions are the
+# one exception to blanket vectorization: `np.log` may differ from
+# `math.log` by 1 ulp (SIMD libm), so BOLD keeps its chunk calculus in a
+# scalar per-lane loop.
+#
+# Lanes inside a machine must share `p`: the AWF/AF weight updates reduce
+# over workers (`inv.sum()`, `np.sum(var / mu)`), and NumPy's pairwise
+# summation is only bit-identical to the scalar reference when each row
+# reduces over exactly p contiguous elements (padding would change the
+# reduction tree).  The batch engine groups lanes accordingly.
+# ---------------------------------------------------------------------------
+
+
+class BatchTechnique:
+    """Vectorized counterpart of :class:`Technique` for L lockstep lanes.
+
+    The protocol `core/batch_sim.py` drives (and plugins bind via
+    :func:`repro.core.schedule.bind_step_batch`):
+
+      machine = factory(n, p, chunk_param, kws)   # arrays are (L,)-shaped
+      machine.begin_instance(ts, act)             # act: active lane ids
+      sizes = machine.sizes(act, workers, remaining, request_idx)
+      batch = machine.granted(act, workers, sizes, remaining_after,
+                              request_idx)        # per-grant batch ids
+      machine.complete(act, workers, sizes, exec_t, sched_t)
+      machine.end_instance(act)
+
+    ``sizes`` returns *thresholded* chunk sizes (the engine applies the
+    final ``max(1, min(size, remaining))`` clamp, mirroring
+    ``Technique.next_chunk``); ``granted`` is called after the clamp with
+    the post-grant remaining, mirroring ``_after_grant``; ``complete``
+    mirrors ``complete_chunk`` and runs once per (lane, round) with the
+    measured execution/scheduling costs.  ``kws`` is the per-lane keyword
+    list the host class's ``_init`` would receive (mu/sigma/h/weights).
+    """
+
+    def __init__(self, n: Sequence[int], p: int,
+                 chunk_param: Sequence[int], kws: Sequence[dict]):
+        self.n = np.asarray(n, np.int64)
+        self.L = len(self.n)
+        self.p = int(p)
+        self.cp = np.asarray(chunk_param, np.int64)
+        self._init_batch(list(kws))
+
+    def _init_batch(self, kws: list) -> None:
+        del kws
+
+    def begin_instance(self, instance: int, act: np.ndarray) -> None:
+        del instance, act
+
+    def sizes(self, act, workers, remaining, request_idx) -> np.ndarray:
+        raise NotImplementedError
+
+    def granted(self, act, workers, sizes, remaining_after,
+                request_idx) -> np.ndarray:
+        # base Technique: batch index == request index
+        del act, workers, sizes, remaining_after
+        return request_idx
+
+    def complete(self, act, workers, sizes, exec_t, sched_t) -> None:
+        del act, workers, sizes, exec_t, sched_t
+
+    def end_instance(self, act: np.ndarray) -> None:
+        del act
+
+
+class _BatchFactoring(BatchTechnique):
+    """Vectorized `_FactoringBase` bookkeeping (FAC2-rule batch chunk)."""
+
+    def _init_batch(self, kws):
+        del kws
+        self._batch = np.zeros(self.L, np.int64)
+        self._in_batch = np.zeros(self.L, np.int64)
+        self._batch_chunk = np.ones(self.L, np.int64)
+
+    def _compute_batch_chunk(self, rows, remaining, batch) -> np.ndarray:
+        # FAC2 rule shared by the AWF family and WF2 (ceil(R / 2P))
+        del rows, batch
+        return np.maximum(
+            1, np.ceil(remaining / (2.0 * self.p))).astype(np.int64)
+
+    def begin_instance(self, instance, act):
+        del instance
+        self._batch[act] = 0
+        self._in_batch[act] = 0
+        self._batch_chunk[act] = self._compute_batch_chunk(
+            act, self.n[act], self._batch[act])
+
+    def granted(self, act, workers, sizes, remaining_after, request_idx):
+        del workers, sizes, request_idx
+        batch = self._batch[act].copy()
+        ib = self._in_batch[act] + 1
+        roll = ib >= self.p
+        if not roll.any():  # mid-batch round (the common case)
+            self._in_batch[act] = ib
+            return batch
+        self._in_batch[act] = np.where(roll, 0, ib)
+        self._batch[act] = self._batch[act] + roll
+        upd = roll & (remaining_after > 0)
+        if upd.any():
+            rows = act[upd]
+            self._batch_chunk[rows] = self._compute_batch_chunk(
+                rows, remaining_after[upd], self._batch[rows])
+        return batch
+
+
+class _BatchWF2(_BatchFactoring):
+    """WF2: fixed per-worker weights scale the FAC2 batch chunk."""
+
+    def _init_batch(self, kws):
+        super()._init_batch(kws)
+        rows = []
+        for kw in kws:
+            weights = kw.get("weights")
+            if weights is None:
+                w = np.ones(self.p, dtype=np.float64)
+            else:
+                w = np.asarray(list(weights), dtype=np.float64)
+                if w.shape != (self.p,):
+                    raise ValueError(
+                        f"weights must have shape ({self.p},)")
+                if np.any(w <= 0):
+                    raise ValueError("weights must be positive")
+            rows.append(w * (self.p / w.sum()))
+        self.weights = (np.stack(rows) if rows
+                        else np.zeros((0, self.p)))
+
+    def sizes(self, act, workers, remaining, request_idx):
+        del remaining, request_idx
+        raw = np.ceil(self.weights[act, workers]
+                      * self._batch_chunk[act]).astype(np.int64)
+        return np.maximum(np.maximum(1, raw), self.cp[act])
+
+
+class _BatchAWF(_BatchFactoring):
+    """AWF family: weights learned from per-worker time-per-iteration,
+    recency-weighted over adaptation points (`_AWFBase._adapt`)."""
+
+    include_overhead = False
+    cadence = "timestep"  # "timestep" | "batch" | "chunk"
+
+    def _init_batch(self, kws):
+        super()._init_batch(kws)
+        shape = (self.L, self.p)
+        self.weights = np.ones(shape)
+        self._sum_time = np.zeros(shape)
+        self._sum_size = np.zeros(shape)
+        self._wap_num = np.zeros(shape)
+        self._wap_den = np.zeros(shape)
+        self._adapt_k = np.zeros(self.L, np.int64)
+
+    def _adapt(self, rows: np.ndarray) -> None:
+        if not len(rows):
+            return
+        # whole-band rounds (the common case) read the state arrays as
+        # views instead of row-gather copies — same values, fewer allocs
+        full = len(rows) == self.L
+        st = self._sum_time if full else self._sum_time[rows]
+        ss = self._sum_size if full else self._sum_size[rows]
+        mask = ss > 0
+        has = mask.any(axis=1)
+        if not has.all():
+            if not has.any():
+                return
+            rows, st, ss, mask = rows[has], st[has], ss[has], mask[has]
+            full = False
+        self._adapt_k[rows] += 1
+        k = self._adapt_k[rows].astype(np.float64)[:, None]
+        pi = np.where(mask, st / np.maximum(ss, 1e-30), 0.0)
+        num = self._wap_num if full else self._wap_num[rows]
+        den = self._wap_den if full else self._wap_den[rows]
+        num = np.where(mask, num + k * pi, num)
+        den = np.where(mask, den + k, den)
+        if full:
+            self._wap_num = num
+            self._wap_den = den
+            self._sum_time[:] = 0.0
+            self._sum_size[:] = 0.0
+        else:
+            self._wap_num[rows] = num
+            self._wap_den[rows] = den
+            self._sum_time[rows] = 0.0
+            self._sum_size[rows] = 0.0
+        seen = (den > 0).all(axis=1)
+        if not seen.any():
+            return  # adapt only once every worker has history
+        if not seen.all():
+            rows, num, den = rows[seen], num[seen], den[seen]
+            full = False
+        wap = num / den
+        wap = np.maximum(wap, 1e-30)
+        inv = 1.0 / wap
+        wnew = self.p * inv / inv.sum(axis=1, keepdims=True)
+        if full:
+            self.weights = wnew
+        else:
+            self.weights[rows] = wnew
+
+    def begin_instance(self, instance, act):
+        if self.cadence == "timestep":
+            self._adapt(act)
+        super().begin_instance(instance, act)
+
+    def sizes(self, act, workers, remaining, request_idx):
+        del remaining, request_idx
+        raw = np.ceil(self.weights[act, workers]
+                      * self._batch_chunk[act]).astype(np.int64)
+        return np.maximum(np.maximum(1, raw), self.cp[act])
+
+    def granted(self, act, workers, sizes, remaining_after, request_idx):
+        batch = super().granted(act, workers, sizes, remaining_after,
+                                request_idx)
+        if self.cadence == "batch":
+            self._adapt(act[self._batch[act] != batch])
+        return batch
+
+    def complete(self, act, workers, sizes, exec_t, sched_t):
+        t = exec_t + (sched_t if self.include_overhead else 0.0)
+        self._sum_time[act, workers] += t
+        self._sum_size[act, workers] += sizes
+        if self.cadence == "chunk":
+            self._adapt(act)
+
+
+class _BatchAWF_B(_BatchAWF):
+    cadence = "batch"
+
+
+class _BatchAWF_C(_BatchAWF):
+    cadence = "chunk"
+
+
+class _BatchAWF_D(_BatchAWF):
+    cadence = "chunk"
+    include_overhead = True
+
+
+class _BatchAWF_E(_BatchAWF):
+    cadence = "batch"
+    include_overhead = True
+
+
+class _BatchAF(BatchTechnique):
+    """AF/mAF: per-worker online mu/sigma (size-weighted Welford) and the
+    Banicescu-Liu chunk rule, with the 10-iteration warm-up round."""
+
+    include_overhead = False
+    WARMUP_CHUNK = AF.WARMUP_CHUNK
+
+    def _init_batch(self, kws):
+        del kws
+        shape = (self.L, self.p)
+        self._cnt = np.zeros(shape)
+        self._mean = np.zeros(shape)
+        self._m2 = np.zeros(shape)
+
+    def _af_rule(self, cnt, mean, m2, w, remaining, cp_rows):
+        """The Banicescu-Liu chunk rule over gathered (or viewed) rows,
+        with the exact float64 operand order of ``AF._chunk_size``."""
+        mu = np.maximum(mean, 1e-30)
+        var = np.where(cnt > 1, m2 / np.maximum(cnt - 1.0, 1.0), 0.0)
+        d = np.sum(var / mu, axis=1)
+        t = 1.0 / np.sum(1.0 / mu, axis=1)
+        r = remaining.astype(np.float64)
+        muw = mu[np.arange(len(mu)), w]
+        c = (d + 2.0 * t * r
+             - np.sqrt(d * d + 4.0 * d * t * r)) / (2.0 * muw)
+        c = np.minimum(c, np.ceil(r / self.p))  # GSS envelope guard
+        sz = np.maximum(1, np.ceil(c).astype(np.int64))
+        return np.maximum(sz, cp_rows)
+
+    def sizes(self, act, workers, remaining, request_idx):
+        del request_idx
+        full = len(act) == self.L
+        cnt = self._cnt if full else self._cnt[act]
+        # AF._chunk_size warms up while *any* worker lacks history (the
+        # `self._warming_up(worker) or np.any(self._cnt < 1)` test)
+        warm = (cnt < 1).any(axis=1)
+        if not warm.any():  # post-warm-up steady state (the common case)
+            return self._af_rule(
+                cnt, self._mean if full else self._mean[act],
+                self._m2 if full else self._m2[act],
+                workers, remaining, self.cp if full else self.cp[act])
+        out = np.empty(len(act), np.int64)
+        out[warm] = np.minimum(self.WARMUP_CHUNK,
+                               np.maximum(1, remaining[warm]))
+        live = ~warm
+        if live.any():
+            rows = act[live]
+            # warm-up grants bypass the chunk_param threshold (Sec. 4.4);
+            # post-warm-up grants apply it inside _af_rule
+            out[live] = self._af_rule(
+                self._cnt[rows], self._mean[rows], self._m2[rows],
+                workers[live], remaining[live], self.cp[rows])
+        return out
+
+    def complete(self, act, workers, sizes, exec_t, sched_t):
+        t = exec_t + (sched_t if self.include_overhead else 0.0)
+        per = t / sizes
+        k = sizes.astype(np.float64)
+        cnt = self._cnt[act, workers] + k
+        self._cnt[act, workers] = cnt
+        d = per - self._mean[act, workers]
+        mean = self._mean[act, workers] + d * k / cnt
+        self._mean[act, workers] = mean
+        self._m2[act, workers] += k * d * (per - mean)
+
+
+class _BatchMAF(_BatchAF):
+    include_overhead = True
+
+
+class _BatchBOLD(BatchTechnique):
+    """BOLD: lane-wise scalar chunk calculus (math.log is not bit-stable
+    under vectorization) + vectorized Welford mu/sigma re-estimation."""
+
+    def _init_batch(self, kws):
+        self.mu = np.array([max(float(kw.get("mu", 1.0)), 1e-30)
+                            for kw in kws])
+        self.sigma = np.array([max(float(kw.get("sigma", 0.0)), 0.0)
+                               for kw in kws])
+        self.h = np.array([max(float(kw.get("h", 1e-6)), 0.0)
+                           for kw in kws])
+        self._wn = np.zeros(self.L, np.int64)
+        self._wmean = np.zeros(self.L)
+        self._wm2 = np.zeros(self.L)
+
+    def sizes(self, act, workers, remaining, request_idx):
+        del workers, request_idx
+        out = np.empty(len(act), np.int64)
+        p = self.p
+        for j, li in enumerate(act):
+            mu = float(self.mu[li])
+            sigma = float(self.sigma[li])
+            q = float(remaining[j])
+            t = q / p
+            a = 2.0 * (sigma / mu) ** 2
+            if a <= 0.0:
+                s = 0.0
+            else:
+                b = 8.0 * a * math.log(max(8.0 * a, 1.0 + 1e-12))
+                cap = max(b, math.e)
+                s = a * math.log(min(cap, max(q, math.e)))
+            c1 = float(self.h[li]) / (mu * math.log(2.0))
+            c = t + s / 2.0 - math.sqrt(s * (t + s / 4.0)) + c1
+            out[j] = max(1, int(math.ceil(c)))
+        return np.maximum(out, self.cp[act])
+
+    def complete(self, act, workers, sizes, exec_t, sched_t):
+        del workers, sched_t
+        per = exec_t / sizes
+        self._wn[act] += 1
+        n = self._wn[act].astype(np.float64)
+        d = per - self._wmean[act]
+        mean = self._wmean[act] + d / n
+        self._wmean[act] = mean
+        self._wm2[act] += d * (per - mean)
+        upd = self._wn[act] >= max(2, self.p)
+        if upd.any():
+            rows = act[upd]
+            self.mu[rows] = np.maximum(self._wmean[rows], 1e-30)
+            self.sigma[rows] = np.sqrt(
+                self._wm2[rows] / (self._wn[rows] - 1))
+
+
+bind_step_batch("wf2", _BatchWF2)
+bind_step_batch("awf", _BatchAWF)
+bind_step_batch("awf_b", _BatchAWF_B)
+bind_step_batch("awf_c", _BatchAWF_C)
+bind_step_batch("awf_d", _BatchAWF_D)
+bind_step_batch("awf_e", _BatchAWF_E)
+bind_step_batch("af", _BatchAF)
+bind_step_batch("maf", _BatchMAF)
+bind_step_batch("bold", _BatchBOLD)
 
 
 # ---------------------------------------------------------------------------

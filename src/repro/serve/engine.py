@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.jax_sched import plan_tiles_for_kernel
+from ..core.jax_sched import plan_tiles_cached
 from ..core.metrics import LoopRecorder
 from ..core.schedule import resolve
 from ..models import decode_step, init_decode_state
@@ -83,6 +83,15 @@ class DecodeEngine:
         # techniques (AF/AWF*) see real per-slot service times
         self._chunk_steps = [0] * slots
         self._chunk_open = [False] * slots
+        # serving plan cache bookkeeping: plans are (re)computed only on
+        # admission change, through the memoized KernelTilePlan cache;
+        # the live-lane mask is maintained incrementally so the hot loop
+        # never rebuilds Python lists per decode step
+        self._active_mask = np.zeros(slots, bool)
+        self._need_refill = True
+        self.plan_calls = 0          # admissions that planned
+        self.plan_time_s = 0.0       # host time spent planning
+        self.plan_cache_hits = 0     # plans served from the memo cache
 
     def _reset_lane(self, s: int) -> None:
         """Splice a fresh single-lane state into lane s: per-lane pos -> 0
@@ -111,11 +120,14 @@ class DecodeEngine:
         stats = EngineStats()
         t0 = time.time()
         self._refill()
-        while any(a is not None for a in self._active) or self.sched.backlog:
+        while self._active_mask.any() or self.sched.backlog:
             if stats.steps >= max_steps:
                 break
             self._advance(stats)
-            self._refill()
+            if self._need_refill:
+                # only when a slot retired: steady-state decode steps
+                # skip the admission scan (and any re-planning) entirely
+                self._refill()
         stats.wall_s = time.time() - t0
         return stats
 
@@ -137,15 +149,25 @@ class DecodeEngine:
         its live KV block count, and the DLS plan models splitting the
         attention grid across ``kernel_p`` cores — the same path
         ``flash_attention(schedule=..., kv_lens=...)`` executes.
+
+        Runs only on admission change (``_refill`` with a pull) and goes
+        through the memoized plan cache: continuous batching revisits the
+        same lane-length signatures constantly, so the steady state pays
+        a dict lookup instead of the Python chunk planner.
         """
-        lens = np.asarray(self.state.pos)
-        live = np.array([int(l) for l, a in zip(lens, self._active)
-                         if a is not None], dtype=np.float64)
+        live = np.asarray(self.state.pos)[self._active_mask].astype(
+            np.float64)
         if live.size == 0:
             return
         costs = np.maximum(np.ceil(live / self.kv_block), 1.0)
-        plan = plan_tiles_for_kernel(costs, p=self.kernel_p,
-                                     technique=self.kernel_spec)
+        from ..core.jax_sched import kernel_plan_cache_stats
+        hits0 = kernel_plan_cache_stats()["hits"]
+        t0 = time.perf_counter()
+        plan = plan_tiles_cached(costs, p=self.kernel_p,
+                                 technique=self.kernel_spec)
+        self.plan_time_s += time.perf_counter() - t0
+        self.plan_calls += 1
+        self.plan_cache_hits += kernel_plan_cache_stats()["hits"] - hits0
         self.kernel_recorder.add(plan.to_record(
             "decode_kv",
             instance=self.kernel_recorder.next_instance("decode_kv")))
@@ -171,10 +193,12 @@ class DecodeEngine:
                         self._reset_lane(s)
                     self._used[s] = True
                     self._active[s] = req
+                    self._active_mask[s] = True
                     self._prompt_left[s] = list(req.prompt_tokens)
                     self._emitted[s] = 0
                     self._outputs[req.rid] = []
                     self._tokens[s, 0] = self._prompt_left[s].pop(0)
+        self._need_refill = False
         if admitted:
             # after activation, so the plan sees the admitted lanes too
             # (a single-slot engine would otherwise never record)
@@ -208,6 +232,8 @@ class DecodeEngine:
                                        self.max_len // 2):
                 stats.completed += 1
                 self._active[s] = None
+                self._active_mask[s] = False
+                self._need_refill = True
                 self._tokens[s, 0] = 0
             else:
                 self._tokens[s, 0] = tok

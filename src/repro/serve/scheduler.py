@@ -60,7 +60,11 @@ class RequestScheduler:
     def __post_init__(self):
         self.spec = resolve(self.technique, default="fac2",
                             chunk_param=self.chunk_param)
+        # backlog = _pending[_head:]: pulls advance the head cursor in
+        # O(chunk) instead of copying the remaining queue per pull; the
+        # consumed prefix is compacted away amortized-O(1) per request
         self._pending: list[Request] = []
+        self._head = 0
         self._tech = None
         self._plan_gen = 0  # admission-plan generation (a "time-step")
         self._assigned: dict[int, list[Request]] = {
@@ -77,7 +81,7 @@ class RequestScheduler:
         plan is a new execution instance (time-step): begin_instance lets
         timestep-cadence techniques (plain AWF) fold the inherited
         telemetry window into their weights."""
-        tech = self.spec.make(n=len(self._pending), p=self.num_workers)
+        tech = self.spec.make(n=self.backlog, p=self.num_workers)
         if self._tech is not None:
             tech.inherit(self._tech)
         self._plan_gen += 1
@@ -101,7 +105,7 @@ class RequestScheduler:
         time of *both* chunks — is attributed to the combined size instead
         of silently dropping the first chunk from the telemetry.
         """
-        if not self._pending:
+        if self._head >= len(self._pending):
             return []
         if self._tech is None or self._tech.remaining <= 0:
             # also covers the backlog having drained mid-plan: granted
@@ -109,9 +113,18 @@ class RequestScheduler:
             # implies remaining <= 0 and the next pull re-plans here
             self._tech = self._new_tech()
         grant = self._tech.next_chunk(worker)
-        take = min(grant.size, len(self._pending))
-        out = self._pending[:take]
-        del self._pending[:take]
+        take = min(grant.size, self.backlog)
+        head = self._head
+        out = self._pending[head:head + take]
+        self._head = head + take
+        if self._head >= len(self._pending):
+            self._pending.clear()
+            self._head = 0
+        elif self._head >= 512 and self._head * 2 >= len(self._pending):
+            # compact once the dead prefix dominates: each request is
+            # moved at most a constant number of times over its lifetime
+            del self._pending[:self._head]
+            self._head = 0
         self._assigned[worker].extend(out)
         prev = self._outstanding.get(worker)
         if prev is None:
@@ -143,7 +156,7 @@ class RequestScheduler:
 
     @property
     def backlog(self) -> int:
-        return len(self._pending)
+        return len(self._pending) - self._head
 
 
 def simulate_serving(requests: list[Request], num_workers: int,

@@ -104,3 +104,37 @@ def test_auto_batch_engine_matches_event(policy, explore_steps):
 def test_auto_batch_engine_rejects_unknown_engine():
     with pytest.raises(ValueError, match="engine"):
         auto_simulate(sphynx_like(n=100), p=2, timesteps=1, engine="warp")
+
+
+def test_registry_candidates_covers_portfolio():
+    from repro.core import registry_candidates
+    from repro.core.schedule import REGISTRY
+
+    arms = registry_candidates(chunk_param=8, exclude=("rand",))
+    assert len(arms) == len(REGISTRY) - 1
+    assert all(a.chunk_param == 8 for a in arms)
+    assert "rand" not in {a.technique for a in arms}
+
+
+def test_auto_batch_engine_full_registry_adaptive_arms():
+    """A full-registry selector (adaptive arms included) evaluated
+    through engine='batch' matches the sequential event loop exactly —
+    the lockstep band covers AWF*/AF/mAF/BOLD/WF2, so the batched
+    exploration grid never falls back to the oracle."""
+    from repro.core import registry_candidates
+
+    w = sphynx_like(n=5_000)
+    speeds = np.ones(6)
+    speeds[:2] = 1.5
+    arms = registry_candidates(chunk_param=4)
+    mk = lambda: AutoSelector(candidates=arms, policy="explore_commit",
+                              explore_steps=1)
+    steps = len(arms) + 4
+    sel_e, hist_e = auto_simulate(w, p=6, timesteps=steps, selector=mk(),
+                                  speeds=speeds, engine="event")
+    sel_b, hist_b = auto_simulate(w, p=6, timesteps=steps, selector=mk(),
+                                  speeds=speeds, engine="batch")
+    assert [h["technique"] for h in hist_b] == \
+        [h["technique"] for h in hist_e]
+    assert [h["t_par"] for h in hist_b] == [h["t_par"] for h in hist_e]
+    assert str(sel_b.best) == str(sel_e.best)

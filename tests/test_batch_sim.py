@@ -183,12 +183,23 @@ def test_dedup_shares_identical_grid_points_safely():
     # each matches the per-config oracle
     ref = simulate("awf_b", W, 8)[0].record
     assert by_tech["awf_b"][2].t_par == ref.t_par
-    # oracle-path aliases keep the (shared) post-run technique instance
+    # adaptive configs ran on the lockstep band, not the event oracle —
+    # band results carry no live technique instance
     awf_results = [res[0] for cfg, res in zip(configs, out)
                    if cfg.technique == "awf_b"]
-    assert awf_results[0].technique is not None
-    assert all(r.technique is awf_results[0].technique
-               for r in awf_results)
+    assert all(r.technique is None for r in awf_results)
+
+
+def test_dedup_oracle_aliases_share_technique_instance():
+    """Oracle-path dedup (same-seed rng-perturb configs are the same run)
+    keeps the shared post-run technique instance on every alias."""
+    perturb = lambda ts, w, rng: 1.0 + 0.1 * rng.random()
+    mk = lambda: BatchConfig(technique="gss", workload=W, p=8, seed=7,
+                             perturb=perturb)
+    a, b = simulate_batch([mk(), mk()])
+    assert a[0].record.t_par == b[0].record.t_par
+    assert a[0].technique is not None  # oracle path keeps the instance
+    assert b[0].technique is a[0].technique
 
 
 def test_per_config_overhead_override():
@@ -209,6 +220,126 @@ def test_batch_grid_cartesian():
     assert len(grid) == 2 * 2 * 2 * 2
     assert {g.technique for g in grid} == {"gss", "fac2"}
     assert all(g.numa_penalty == 0.5 for g in grid)
+
+
+# ---------------------------------------------------------------------------
+# Lockstep (adaptive) band — the config-parallel AWF/AF/BOLD engine
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_BAND = ("awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
+                 "bold", "wf2")
+
+
+def test_adaptive_band_has_step_batch_forms():
+    """Every adaptive / worker-dependent built-in carries a vectorized
+    step_batch form (the registry view the docs generator reads)."""
+    assert set(ADAPTIVE_BAND) <= set(REGISTRY.step_batch_names())
+
+
+@pytest.mark.parametrize("name", ADAPTIVE_BAND)
+def test_adaptive_band_no_oracle_fallback(name):
+    """The full adaptive band runs vectorized: results carry no live
+    technique instance (the event-oracle path would attach one)."""
+    cfg = BatchConfig(technique=name, workload=W, p=8, timesteps=2)
+    res = simulate_batch([cfg])[0]
+    assert all(r.technique is None for r in res)
+    ref = simulate(name, W, 8, timesteps=2)
+    _assert_same(res, ref)
+
+
+def test_adaptive_state_carries_across_timesteps():
+    """AWF adapts only at time-step boundaries: the lockstep band must
+    carry weights across instances exactly like the oracle's persistent
+    technique object (t_par changes after the first adaptation)."""
+    speeds = (1.0, 2.0, 1.0, 1.3)
+    cfg = BatchConfig(technique="awf", workload=W, p=4, timesteps=4,
+                      speeds=speeds)
+    res = simulate_batch([cfg])[0]
+    ref = simulate("awf", W, 4, timesteps=4, speeds=speeds)
+    _assert_same(res, ref)
+    assert res[0].record.t_par != res[1].record.t_par  # weights adapted
+
+
+def test_adaptive_band_mixed_grid_with_wf2_weights():
+    """Heterogeneous adaptive grid (mixed p, weights, perturb) in one
+    call matches per-config simulate."""
+    w2 = sphynx_like(n=1800, seed=4)
+    weights = (1.0, 0.5, 2.0, 1.0, 1.0, 0.8)
+    perturb = lambda ts, wkr: 1.0 + 0.02 * wkr
+    configs = [
+        BatchConfig(technique="wf2", workload=W, p=6, weights=weights),
+        BatchConfig(technique="wf2", workload=w2, p=6, weights=weights,
+                    chunk_param=9),
+        BatchConfig(technique="maf", workload=w2, p=4, perturb=perturb,
+                    timesteps=2),
+        BatchConfig(technique="bold", workload=W, p=12),
+    ]
+    out = simulate_batch(configs, profile=NOISY_PROFILE)
+    for cfg, res in zip(configs, out):
+        ref = simulate(cfg.technique, cfg.workload, cfg.p, cfg.chunk_param,
+                       timesteps=cfg.timesteps, weights=cfg.weights,
+                       perturb=cfg.perturb, profile=NOISY_PROFILE)
+        _assert_same(res, ref)
+
+
+def test_adaptive_grid_dedup_axis():
+    """Dedup correctness on the adaptive grid axis: the repetition-seed
+    axis collapses (adaptive techniques never read the seed), every
+    config still gets an independent, oracle-exact result."""
+    rec = LoopRecorder()
+    configs = batch_grid(list(ADAPTIVE_BAND), [W], ps=(8,),
+                         seeds=(0, 1, 2), chunk_params=(1, 16))
+    out = simulate_batch(configs, recorder=rec)
+    assert len(rec.records) == len(configs)
+    by_key: dict = {}
+    for cfg, res in zip(configs, out):
+        by_key.setdefault((cfg.technique, cfg.chunk_param),
+                          []).append(res[0].record)
+    for (tech, cp), recs in by_key.items():
+        ts = [r.t_par for r in recs]
+        assert ts[0] == ts[1] == ts[2], (tech, cp)
+        # value-equal but independently mutable across the seed axis
+        assert recs[0].thread_finish is not recs[1].thread_finish
+        ref = simulate(tech, W, 8, cp)[0].record
+        assert ts[0] == ref.t_par, (tech, cp)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        name=st.sampled_from(sorted(ADAPTIVE_BAND)),
+        n=st.integers(min_value=1, max_value=2500),
+        p=st.integers(min_value=1, max_value=20),
+        cp=st.integers(min_value=1, max_value=90),
+        seed=st.integers(min_value=0, max_value=999),
+        timesteps=st.integers(min_value=1, max_value=3),
+        hetero=st.booleans(),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_property_adaptive_band_matches_oracle(name, n, p, cp, seed,
+                                                   timesteps, hetero):
+        """Bit-exact agreement on the lockstep band across seeds,
+        sigma>0 workloads (sphynx + NOISY_PROFILE), chunk params,
+        timesteps, and heterogeneous speeds."""
+        w = sphynx_like(n=n, seed=seed % 5)  # irregular: sigma > 0
+        speeds = ([1.0 + 0.2 * (i % 4) for i in range(p)] if hetero
+                  else None)
+        cfg = BatchConfig(technique=name, workload=w, p=p, chunk_param=cp,
+                          seed=seed, timesteps=timesteps, speeds=speeds,
+                          chunk_cold_cost=5e-8)
+        batch = simulate_batch([cfg], profile=NOISY_PROFILE)[0]
+        assert all(r.technique is None for r in batch)  # no fallback
+        ref = simulate(name, w, p, cp, seed=seed, timesteps=timesteps,
+                       speeds=speeds, chunk_cold_cost=5e-8,
+                       profile=NOISY_PROFILE)
+        _assert_same(batch, ref)
+
+else:  # pragma: no cover - depends on dev env
+
+    @pytest.mark.skip(reason="property test needs hypothesis "
+                             "(requirements-dev.txt)")
+    def test_property_adaptive_band_matches_oracle():
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -242,3 +373,18 @@ else:  # pragma: no cover - depends on dev env
                              "(requirements-dev.txt)")
     def test_property_batch_matches_oracle():
         pass
+
+
+def test_empty_workload_raises_like_oracle():
+    """n=0 / p=0 configs must raise the oracle's ValueError on every
+    band instead of fabricating a result (regression: the lockstep band
+    clamped size to 1 and read past the empty cost prefix)."""
+    from repro.core.workloads import Workload
+
+    empty = Workload("empty", np.zeros(0), {})
+    for name in ("awf_b", "gss"):
+        with pytest.raises(ValueError, match="need n>0"):
+            simulate_batch([BatchConfig(technique=name, workload=empty,
+                                        p=4)])
+    with pytest.raises(ValueError, match="need n>0"):
+        simulate_batch([BatchConfig(technique="gss", workload=W, p=0)])

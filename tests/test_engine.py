@@ -94,3 +94,27 @@ def test_engine_reports_chunk_service_times(model):
     assert completed, "no chunk measurements reached the scheduler"
     assert all(e > 0 for _, e in completed)
     assert {w for w, _ in completed} <= {0, 1}
+
+
+def test_engine_plans_only_on_admission_change(model):
+    """The serving hot path must not re-plan per decode step: planning
+    happens once per admission (plan_calls == kernel records), repeated
+    lane-length signatures come out of the memo cache, and steady-state
+    decode steps skip the admission scan entirely."""
+    from repro.core.jax_sched import kernel_plan_cache_clear
+
+    kernel_plan_cache_clear()
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64)
+    # identical requests -> identical lane-length signatures across
+    # admissions -> the cache serves the repeats
+    for i in range(8):
+        eng.submit(_req(i, prompt_len=4, new=4))
+    stats = eng.run()
+    assert stats.completed == 8
+    assert eng.plan_calls == len(eng.kernel_records)
+    assert eng.plan_calls < stats.steps  # not every decode step
+    assert eng.plan_cache_hits > 0      # repeated signatures reused
+    # telemetry still records one plan per admission, in order
+    assert [r.instance for r in eng.kernel_records] == \
+        list(range(len(eng.kernel_records)))

@@ -321,3 +321,78 @@ def test_decode_engine_single_slot_records_admitted_lane(smoke_model):
     assert stats.completed == 3
     assert eng.kernel_records, "single-slot engine must record admissions"
     assert all(r.p == eng.kernel_p for r in eng.kernel_records)
+
+
+# ---------------------------------------------------------------------------
+# plan_tiles_cached — the zero-overhead serving plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_tiles_cached_matches_uncached():
+    from repro.core.jax_sched import (kernel_plan_cache_clear,
+                                      kernel_plan_cache_stats,
+                                      plan_tiles_cached)
+
+    kernel_plan_cache_clear()
+    costs = RNG.integers(1, 40, 24).astype(float)
+    for spec in ("fac2", "gss,2", "awf_b"):
+        cached = plan_tiles_cached(costs, p=4, technique=spec)
+        direct = plan_tiles_for_kernel(costs, p=4, technique=spec)
+        np.testing.assert_array_equal(cached.order, direct.order)
+        np.testing.assert_array_equal(cached.step_worker,
+                                      direct.step_worker)
+        np.testing.assert_allclose(cached.worker_cost, direct.worker_cost)
+    s = kernel_plan_cache_stats()
+    assert s["misses"] == 3 and s["hits"] == 0
+
+
+def test_plan_tiles_cached_hits_on_repeat_signature():
+    from repro.core.jax_sched import (kernel_plan_cache_clear,
+                                      kernel_plan_cache_stats,
+                                      plan_tiles_cached)
+
+    kernel_plan_cache_clear()
+    costs = RNG.integers(1, 40, 16).astype(float)
+    a = plan_tiles_cached(costs, p=4, technique="fac2")
+    b = plan_tiles_cached(costs.copy(), p=4, technique="fac2")
+    assert b is a  # same signature -> shared plan, no re-plan
+    c = plan_tiles_cached(costs, p=8, technique="fac2")
+    assert c is not a  # p is part of the key
+    d = plan_tiles_cached(costs[:-1], p=4, technique="fac2")
+    assert d is not a  # lane lengths changed -> re-plan
+    s = kernel_plan_cache_stats()
+    assert s["hits"] == 1 and s["misses"] == 3
+
+
+def test_plan_tiles_cached_weights_bucket():
+    """Near-identical AWF weight vectors share a plan (same bucket);
+    materially different weights do not."""
+    from repro.core.jax_sched import (kernel_plan_cache_clear,
+                                      plan_tiles_cached)
+
+    kernel_plan_cache_clear()
+    costs = RNG.integers(1, 40, 16).astype(float)
+    w = np.array([1.0, 1.0, 0.5, 1.5])
+    a = plan_tiles_cached(costs, p=4, technique="fac2", weights=w)
+    b = plan_tiles_cached(costs, p=4, technique="fac2",
+                          weights=w * (1.0 + 1e-4))  # sub-bucket drift
+    assert b is a
+    c = plan_tiles_cached(costs, p=4, technique="fac2",
+                          weights=np.array([1.0, 1.0, 1.5, 0.5]))
+    assert c is not a
+
+
+def test_plan_tiles_cached_cost_fn_bypasses():
+    from repro.core.jax_sched import (kernel_plan_cache_clear,
+                                      kernel_plan_cache_stats,
+                                      plan_tiles_cached)
+
+    kernel_plan_cache_clear()
+    costs = RNG.integers(1, 40, 8).astype(float)
+    fn = lambda c: c * 2.0
+    a = plan_tiles_cached(costs, p=4, cost_fn=fn)
+    b = plan_tiles_cached(costs, p=4, cost_fn=fn)
+    assert a is not b  # opaque cost_fn: never memoized
+    assert kernel_plan_cache_stats()["bypass"] == 2
+    direct = plan_tiles_for_kernel(costs, p=4, cost_fn=fn)
+    np.testing.assert_array_equal(a.order, direct.order)

@@ -304,6 +304,34 @@ def test_serving_completes_all_requests_with_adaptive_technique():
         assert r["n"] == len(reqs), tech
 
 
+def test_serving_scheduler_head_cursor_serves_in_order():
+    """pull() slices the backlog via a head cursor (no per-pull copy of
+    the remaining queue): requests are still handed out exactly once, in
+    submission order, across interleaved submits/pulls/compactions."""
+    from repro.serve.scheduler import RequestScheduler
+
+    sched = RequestScheduler(num_workers=3, technique="fac2")
+    served = []
+    rid = 0
+    rng = np.random.default_rng(9)
+    for wave in range(40):
+        for _ in range(int(rng.integers(20, 60))):
+            sched.submit(Request(rid=rid, arrival=0.0, prompt_len=8,
+                                 max_new_tokens=4))
+            rid += 1
+        # drain roughly half the backlog, then submit the next wave (the
+        # interleaving that exercises cursor compaction mid-queue)
+        target = sched.backlog // 2
+        while sched.backlog > target:
+            chunk = sched.pull(int(rng.integers(3)))
+            assert chunk, "empty pull with non-empty backlog"
+            served.extend(r.rid for r in chunk)
+    while sched.backlog:
+        served.extend(r.rid for r in sched.pull(0))
+    assert served == list(range(rid))  # exactly once, in order
+    assert sched.backlog == 0 and not sched.pull(1)
+
+
 # -- balance -------------------------------------------------------------------
 
 
