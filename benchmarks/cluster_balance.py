@@ -16,11 +16,16 @@ The claims this bench gates on (CI runs `--quick`):
   * on the uniform control, static stays within 5% of the best — node-
     level dynamics cost nothing when the traffic is already balanced.
 
-`heavy_tail` is the deliberately un-gated row: depending on n/seed its
-rare giants can each cost on the order of the ideal makespan, in which
-case the critical path is one indivisible request and binding it early
-(which static does by accident) is all that matters — dynamic wins the
-milder draws and loses those, so no claim is gated on it.
+`heavy_tail` carries a *tolerance band* instead of a win gate:
+depending on n/seed its rare giants can each cost on the order of the
+ideal makespan, in which case the critical path is one indivisible
+request and binding it early (which static does by accident) is all
+that matters — dynamic wins the milder draws and loses those.  Both
+regimes occur at this bench's own parameters (the n=600 --quick draw is
+a 1.4x dynamic win, the n=800 full draw a 0.95x loss), so the gate only
+pins the ratio inside ``HEAVY_TAIL_BAND``: dynamic may trail static by
+at most the one-giant margin and may not silently regress into a
+blowout either way.
 
 Writes benchmarks/results/cluster_balance.json (full run) or
 cluster_balance_quick.json (--quick), so the CI gate never dirties the
@@ -48,6 +53,11 @@ THREAD_TECHNIQUE = "fac2"
 #: scenarios where the paper's dynamic-beats-static claim is gated
 GATED_SCENARIOS = ("spiky", "zipf", "bursty", "degraded_replica")
 SPEEDUP_FLOOR = 1.2
+#: heavy_tail tolerance band (see module docstring): static may win by
+#: the indivisible-giant margin (lower edge), dynamic by an ordinary
+#: rebalancing margin (upper edge) — measured 0.95x (full) / 1.4x
+#: (--quick) at the committed parameters
+HEAVY_TAIL_BAND = (0.8, 3.0)
 UNIFORM_SLACK = 1.05
 
 
@@ -136,6 +146,22 @@ def check(result: dict) -> list[str]:
             f"static replica partitioning fell "
             f"{result['uniform_static_within']}x behind the best on the "
             f"uniform control (allowed {UNIFORM_SLACK}x)")
+    # heavy_tail is regime-sensitive, not winnable-by-construction: when
+    # a drawn giant costs on the order of the ideal makespan, the
+    # critical path is that one *indivisible* request, and static's
+    # accidental early binding of it beats any amount of node-level
+    # rebalancing (no scheduler can split a single request).  So the
+    # gate is a band, not a floor: dynamic may trail static by at most
+    # the one-giant margin, and a result outside the band in either
+    # direction means the simulator or traffic model changed.
+    lo, hi = HEAVY_TAIL_BAND
+    ht = result["scenarios"]["heavy_tail"]["speedup_vs_static"]
+    if not lo <= ht <= hi:
+        fails.append(
+            f"heavy_tail best-dynamic/static speedup {ht}x left the "
+            f"tolerance band [{lo}, {hi}] — either dynamic collapsed "
+            f"beyond the indivisible-giant margin or the traffic/cost "
+            f"model shifted")
     return fails
 
 

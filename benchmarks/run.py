@@ -17,7 +17,8 @@ import sys
 import time
 
 from . import (adaptive_bench, batch_bench, cluster_balance,
-               framework_bench, kernel_sched_bench, paper_campaign)
+               framework_bench, kernel_sched_bench, paper_campaign,
+               steal_bench)
 from .common import RESULTS, emit
 
 
@@ -86,6 +87,9 @@ def main() -> None:
         # quick-sized; named so emit() doesn't overwrite the committed
         # full-run cluster_balance.json artifact
         "cluster_balance_quick": cluster_balance.rows,
+        # work-stealing vs pure DLS (loop + cluster level); quick-sized,
+        # named so emit() doesn't overwrite the committed steal_bench.json
+        "steal_quick": steal_bench.rows,
     }
     # roofline needs dry-run artifacts; include when present
     try:

@@ -1,0 +1,255 @@
+"""Work-stealing vs pure DLS, head to head at both levels.
+
+The headline question of the steal band (`repro/core/stealing.py`):
+*where* does stealing beat central-queue self-scheduling, and does the
+``dls_steal`` hybrid dominate both?  The cost model makes the trade
+explicit — a DLS pull pays queue synchronization on every chunk and has
+no locality (any worker executes any chunk, so ccNUMA charges the
+remote penalty almost everywhere), while a steal-band worker pops its
+own NUMA-aligned partition for free and pays ``o_steal`` + the remote
+penalty only on the migrated tail.
+
+Loop level (``simulate_batch`` over the registry):
+
+  * ``skewed_numa`` — front-loaded per-iteration costs (the paper's
+    Sec. 3.1 profile) under a strong NUMA penalty: static is local but
+    imbalanced, central DLS balances but goes remote, stealing does
+    both.  **Gated: best steal/hybrid beats the best pure-DLS.**
+  * ``hetero_numa`` — uniform costs, heterogeneous core speeds, NUMA:
+    the imbalance is in the workers instead of the iterations.
+    **Gated likewise.**
+  * ``skewed_flat`` — skewed costs, no NUMA: recorded un-gated; with
+    locality out of the picture, central DLS and stealing converge and
+    the hybrid's planned initial assignment is the interesting row.
+  * ``uniform`` — the control: uniform costs, homogeneous workers.
+    **Gated the other way: stealing must NOT meaningfully beat the best
+    pure-DLS technique (static already wins here).**
+
+Cluster level (``simulate_cluster`` with a steal-band node schedule —
+replica-to-replica request migration, arXiv:1911.06714):
+
+  * spiky / bursty traffic and a degraded replica, steal node level vs
+    static replica partitioning and the DLS node portfolio.  **Gated
+    (CI): stealing >= static on at least one skewed scenario.**
+
+Writes benchmarks/results/steal_bench.json (full) or steal_quick.json
+(--quick; the CI gate artifact, never dirties the committed full run).
+
+    PYTHONPATH=src python -m benchmarks.steal_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import BatchConfig, simulate_batch
+from repro.core.workloads import frontloaded_like
+from repro.core.workloads import Workload
+from repro.serve.cluster import cluster_grid, make_traffic, simulate_cluster_batch
+
+from .common import RESULTS
+
+#: the pure-DLS comparison set — one technique per band (static plan,
+#: fixed-size, guided, trapezoid, factoring, adaptive weighted)
+DLS_TECHNIQUES = ("static", "ss,8", "gss", "tss", "fac2", "awf_b")
+#: the steal family under test (chunk_param = pop/steal grain)
+STEAL_SET = ("ws_rr,64", "ws_rp,64", "ws_rr_c,64", "ws_rp_c,64",
+             "dls_steal,64")
+#: loop scenarios where the steal-beats-DLS claim is gated
+LOOP_GATED = ("skewed_numa", "hetero_numa")
+LOOP_SPEEDUP_FLOOR = 1.05   # best steal >= 1.05x faster than best pure DLS
+UNIFORM_SLACK = 1.02        # on the control, steal may not win by > 2%
+
+NODE_TECHNIQUES = ("static", "ss,4", "fac2", "awf_b")
+NODE_STEAL = ("ws_rr,4", "ws_rp,4", "dls+steal,4")
+CLUSTER_GATED = ("spiky", "bursty", "degraded_replica")
+
+HETERO = (1.0, 1.0, 1.2, 1.2, 1.5, 1.5, 2.0, 2.0)
+
+
+def loop_scenarios(quick: bool = False) -> dict[str, dict]:
+    n = 40_000 if quick else 120_000
+    skew = frontloaded_like(n=n, seed=1)
+    uni = Workload("uniform_1us", np.full(n, 1e-6), {})
+    return {
+        "skewed_numa": dict(workload=skew, speeds=None, numa=0.8),
+        "hetero_numa": dict(workload=uni, speeds=HETERO, numa=0.8),
+        "skewed_flat": dict(workload=skew, speeds=HETERO, numa=0.0),
+        "uniform": dict(workload=uni, speeds=None, numa=0.8),
+    }
+
+
+def _loop_rows(sc: dict, p: int) -> dict[str, float]:
+    techniques = DLS_TECHNIQUES + STEAL_SET
+    configs = [
+        BatchConfig(technique=t, workload=sc["workload"], p=p,
+                    speeds=sc["speeds"], numa_penalty=sc["numa"])
+        for t in techniques
+    ]
+    res = simulate_batch(configs)
+    return {t: float(r[0].record.t_par) for t, r in zip(techniques, res)}
+
+
+def run(quick: bool = False, p: int = 8, replicas: int = 8,
+        workers: int = 4) -> dict:
+    out: dict = dict(
+        name="steal_bench",
+        p=p,
+        replicas=replicas,
+        workers_per_replica=workers,
+        dls_techniques=list(DLS_TECHNIQUES),
+        steal_techniques=list(STEAL_SET),
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        loop_scenarios={},
+        cluster_scenarios={},
+    )
+
+    # --- loop level --------------------------------------------------------
+    steal_wins = []
+    for name, sc in loop_scenarios(quick=quick).items():
+        rows = _loop_rows(sc, p)
+        dls = {t: rows[t] for t in DLS_TECHNIQUES}
+        steal = {t: rows[t] for t in STEAL_SET}
+        best_dls = min(dls, key=dls.get)
+        best_steal = min(steal, key=steal.get)
+        speedup = dls[best_dls] / max(steal[best_steal], 1e-12)
+        out["loop_scenarios"][name] = dict(
+            n=sc["workload"].n,
+            numa_penalty=sc["numa"],
+            hetero_speeds=sc["speeds"] is not None,
+            t_par={t: round(v, 6) for t, v in rows.items()},
+            best_dls=best_dls,
+            best_steal=best_steal,
+            steal_speedup_vs_dls=round(speedup, 4),
+        )
+        if name in LOOP_GATED and speedup >= LOOP_SPEEDUP_FLOOR:
+            steal_wins.append(name)
+    out["loop_steal_wins"] = steal_wins
+    out["uniform_steal_speedup"] = \
+        out["loop_scenarios"]["uniform"]["steal_speedup_vs_dls"]
+
+    # --- cluster level -----------------------------------------------------
+    n = 600 if quick else 800
+    traffic = {
+        "spiky": dict(requests=make_traffic("spiky", n=n, seed=1),
+                      replica_speed=None),
+        "bursty": dict(requests=make_traffic("bursty", n=n, seed=1),
+                       replica_speed=None),
+        "degraded_replica": dict(
+            requests=make_traffic("uniform", n=n, seed=2),
+            replica_speed=[2.5] + [1.0] * (replicas - 1)),
+    }
+    cluster_steal_wins = []
+    for name, sc in traffic.items():
+        node_all = NODE_TECHNIQUES + NODE_STEAL
+        configs = cluster_grid(
+            [f"{t}/fac2" for t in node_all], {name: sc["requests"]},
+            num_replicas=replicas, workers_per_replica=workers,
+            replica_speed=sc["replica_speed"])
+        res = simulate_cluster_batch(configs)
+        rows = {t: dict(makespan=round(r["makespan"], 4),
+                        p99=round(r["p99"], 4),
+                        migrated=r["migrated_requests"],
+                        cross_node_pi=round(r["cross_node_pi"], 2))
+                for t, r in zip(node_all, res)}
+        static_ms = rows["static"]["makespan"]
+        steal_rows = {t: rows[t] for t in NODE_STEAL}
+        best_steal = min(steal_rows, key=lambda t: steal_rows[t]["makespan"])
+        out["cluster_scenarios"][name] = dict(
+            n=len(sc["requests"]),
+            replica_speed=sc["replica_speed"],
+            techniques=rows,
+            static_makespan=static_ms,
+            best_steal=best_steal,
+            best_steal_makespan=steal_rows[best_steal]["makespan"],
+            steal_speedup_vs_static=round(
+                static_ms / max(steal_rows[best_steal]["makespan"], 1e-12),
+                3),
+        )
+        if (name in CLUSTER_GATED
+                and steal_rows[best_steal]["makespan"] <= static_ms):
+            cluster_steal_wins.append(name)
+    out["cluster_steal_wins"] = cluster_steal_wins
+    return out
+
+
+def check(result: dict) -> list[str]:
+    """The bench's acceptance gates; returns failure messages."""
+    fails = []
+    if len(result["loop_steal_wins"]) < 2:
+        fails.append(
+            f"stealing/hybrid beat the best pure-DLS by >= "
+            f"{LOOP_SPEEDUP_FLOOR}x on only {result['loop_steal_wins']} — "
+            f"need >= 2 of {list(LOOP_GATED)}")
+    if result["uniform_steal_speedup"] > UNIFORM_SLACK:
+        fails.append(
+            f"stealing beat the best pure-DLS by "
+            f"{result['uniform_steal_speedup']}x on the uniform control "
+            f"(allowed {UNIFORM_SLACK}x) — the control should not be won")
+    if not result["cluster_steal_wins"]:
+        fails.append(
+            "steal-based request migration beat static replica "
+            f"partitioning on none of {list(CLUSTER_GATED)}")
+    return fails
+
+
+def rows(quick: bool = True) -> list[dict]:
+    """benchmarks.run entry point."""
+    r = run(quick=quick)
+    flat = []
+    for name, sc in r["loop_scenarios"].items():
+        flat.append(dict(name=f"steal_bench/loop/{name}",
+                         best_dls=sc["best_dls"],
+                         best_steal=sc["best_steal"],
+                         steal_speedup_vs_dls=sc["steal_speedup_vs_dls"]))
+    for name, sc in r["cluster_scenarios"].items():
+        flat.append(dict(
+            name=f"steal_bench/cluster/{name}",
+            static_makespan=sc["static_makespan"],
+            best_steal=sc["best_steal"],
+            steal_speedup_vs_static=sc["steal_speedup_vs_static"],
+            migrated=sc["techniques"][sc["best_steal"]]["migrated"]))
+    return flat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads / request streams (CI)")
+    ap.add_argument("--p", type=int, default=8, help="loop-level workers")
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+    result = run(quick=args.quick, p=args.p, replicas=args.replicas,
+                 workers=args.workers)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    name = "steal_quick" if args.quick else "steal_bench"
+    (RESULTS / f"{name}.json").write_text(json.dumps(result, indent=1))
+    for sec in ("loop_scenarios", "cluster_scenarios"):
+        for sname, sc in result[sec].items():
+            if sec == "loop_scenarios":
+                print(f"loop/{sname:13s} best_dls={sc['best_dls']:>7s}  "
+                      f"best_steal={sc['best_steal']:>11s}  "
+                      f"steal speedup {sc['steal_speedup_vs_dls']:.3f}x")
+            else:
+                print(f"cluster/{sname:17s} static={sc['static_makespan']:.4f} "
+                      f"best_steal={sc['best_steal']:>11s} "
+                      f"{sc['best_steal_makespan']:.4f} "
+                      f"({sc['steal_speedup_vs_static']:.2f}x)")
+    fails = check(result)
+    if fails:
+        raise SystemExit("; ".join(fails))
+    print(f"loop steal wins: {', '.join(result['loop_steal_wins'])}; "
+          f"uniform control {result['uniform_steal_speedup']}x; "
+          f"cluster wins: {', '.join(result['cluster_steal_wins'])}")
+
+
+if __name__ == "__main__":
+    main()

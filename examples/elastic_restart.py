@@ -2,22 +2,65 @@
 
 Shows the full fault-tolerance path at laptop scale: checkpoints are
 mesh-agnostic (logical arrays), the data pipeline is deterministic by
-step, and the DLS planner re-plans shares for the new worker count —
-the paper's self-scheduling argument applied at pod scale.
+step, the DLS planner re-plans shares for the new worker count, and
+adaptive techniques *inherit* their learned per-worker telemetry across
+the shrink/grow (``Technique.inherit``) — the paper's self-scheduling
+argument applied at pod scale.
+
+``elastic_handoff`` is the re-plan + inherit path on its own (no jax,
+no training loop) — it is what ``tests/test_elastic.py`` exercises.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core import plan_schedule, replan
-from repro.data.pipeline import DataConfig
-from repro.optim.adamw import OptimizerConfig
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.core import make_technique, plan_schedule, replan
+
+
+def elastic_handoff(n: int = 1000, old_p: int = 4, new_p: int = 3,
+                    technique: str = "awf_b", chunks_done: int = 10):
+    """Re-plan ``n`` iterations from ``old_p`` onto ``new_p`` workers.
+
+    Returns ``(new_plan, old_tech, new_tech)``: the re-balanced
+    :class:`~repro.core.planner.Plan` over the surviving workers, and the
+    adaptive technique pair after ``new_tech.inherit(old_tech)`` — the
+    learned per-worker weights/telemetry of the workers that survive the
+    resize carry over instead of restarting cold (new workers, on grow,
+    start from a neutral prior).
+    """
+    # the chunk-plan view: re-balance the remaining iterations
+    plan = plan_schedule("fac2", n=n, p=old_p)
+    done = sum(c.size for c in plan.chunks[:chunks_done])
+    # note: replan shifts chunk starts by `done` (they index the original
+    # iteration space), so conservation is checked on sizes, not validate()
+    new_plan = replan(plan, new_p=new_p, done_iterations=done)
+    assert sum(c.size for c in new_plan.chunks) == n - done
+
+    # the adaptive-state view: run the old technique for a few grants so
+    # it learns per-worker speeds, then hand its state to the resized one
+    old = make_technique(technique, n=n, p=old_p)
+    old.begin_instance(0)
+    speeds = 1.0 + 0.5 * np.arange(old_p)  # worker w takes 1 + w/2 ms/iter
+    for i in range(4 * old_p):
+        w = i % old_p
+        g = old.next_chunk(w)
+        if g is None:
+            break
+        old.complete_chunk(w, g, exec_time=g.size * speeds[w] * 1e-3,
+                           sched_time=1e-6)
+    new = make_technique(technique, n=n - done, p=new_p)
+    new.inherit(old)
+    new.begin_instance(1)
+    return new_plan, old, new
 
 
 def main():
+    from repro.configs.base import ModelConfig
+    from repro.data.pipeline import DataConfig
+    from repro.optim.adamw import OptimizerConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
     cfg = ModelConfig(name="demo-20m", family="dense", num_layers=4,
                       d_model=256, num_heads=4, num_kv_heads=2, d_ff=1024,
                       vocab_size=4096, tie_embeddings=True, remat="none")
@@ -53,15 +96,16 @@ def main():
     print(f"resumed at step {hist[0]['step']}, finished at "
           f"{hist[-1]['step']}, final shares={hist[-1]['shares']}")
 
-    # --- the DLS view: re-planning the remaining work -----------------------
-    plan = plan_schedule("fac2", n=1000, p=4)
-    done = sum(c.size for c in plan.chunks[:10])
-    new = replan(plan, new_p=3, done_iterations=done)
+    # --- the DLS view: re-planning + adaptive-state handoff -----------------
+    new_plan, old, new = elastic_handoff()
     loads = np.zeros(3)
-    for c in new.chunks:
+    for c in new_plan.chunks:
         loads[c.worker] += c.size
-    print(f"\nDLS replan: {1000 - done} remaining iterations re-balanced "
+    print(f"\nDLS replan: {new_plan.n} remaining iterations re-balanced "
           f"onto 3 workers -> loads {loads.astype(int).tolist()}")
+    print(f"AWF-B handoff 4 -> 3 workers: old weights "
+          f"{np.round(old.weights, 3).tolist()} -> inherited "
+          f"{np.round(new.weights, 3).tolist()}")
 
 
 if __name__ == "__main__":

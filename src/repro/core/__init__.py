@@ -24,6 +24,10 @@ from .techniques import (  # noqa: F401
     Technique,
     make_technique,
 )
+from .stealing import (  # noqa: F401
+    STEAL_TECHNIQUES,
+    StealGrant,
+)
 from .metrics import (  # noqa: F401
     LoopInstanceRecord,
     LoopRecorder,

@@ -73,6 +73,7 @@ from .simulator import (
     _technique_kwargs,
     simulate,
 )
+from .stealing import StealGrant
 from .techniques import ChunkGrant, Technique
 from .workloads import Workload
 
@@ -610,6 +611,7 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
     lanes = [lane for group in groups for lane in group]
     L = len(lanes)
     G = len(groups)
+    lane_steal = np.zeros(L, bool)
     pmax = max(l.cfg.p for l in lanes)
     pvec = np.asarray([l.cfg.p for l in lanes], np.int64)
     n = np.asarray([l.cfg.workload.n for l in lanes], np.int64)
@@ -623,6 +625,14 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
             n=[l.cfg.workload.n for l in group], p=group[0].cfg.p,
             chunk_param=[l.spec.chunk_param for l in group],
             kws=[l.kw for l in group]))
+    # steal-band machines (core/stealing.py) own per-lane deque state and
+    # return chunk *positions* + victim-probe counts instead of sizes
+    # against the engine's shared-queue cursor
+    steal_g = [hasattr(m, "pops") for m in machines]
+    any_steal = any(steal_g)
+    for gi, group in enumerate(groups):
+        if steal_g[gi]:
+            lane_steal[g_start[gi]:g_start[gi] + len(group)] = True
 
     # flat concatenated cost prefix sums (shared per unique workload)
     offs = np.zeros(L, np.int64)
@@ -644,6 +654,7 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
     sconst = np.asarray([
         (l.overhead.o_dispatch + l.overhead.sync_cost(l.spec.meta.sync))
         + l.overhead.calc_cost(l.spec.meta.o_cs) for l in lanes])
+    ost = np.asarray([l.overhead.o_steal for l in lanes])
     pen = np.asarray([l.cfg.numa_penalty for l in lanes])
     use_numa = bool((pen > 0.0).any())
     if use_numa:
@@ -689,19 +700,41 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
             rem = n[a] - scheduled[a]
             ridx = reqidx[a]
             size = np.empty(len(a), np.int64)
+            # steal lanes overwrite start with deque positions; the
+            # shared-queue cursor stays correct for everyone else
+            start = scheduled[a]
+            att = np.zeros(len(a)) if any_steal else None
+            vic = (np.empty(len(a), np.int64)
+                   if any_steal and record_chunks else None)
             pos = 0
             for gi, ga in segs:
                 sl = slice(pos, pos + len(ga))
-                size[sl] = machines[gi].sizes(
-                    ga - g_start[gi], w[sl], rem[sl], ridx[sl])
+                if steal_g[gi]:
+                    st_, sz_, at_, vi_ = machines[gi].pops(
+                        ga - g_start[gi], w[sl])
+                    start[sl] = st_
+                    size[sl] = sz_
+                    att[sl] = at_
+                    if vic is not None:
+                        vic[sl] = vi_
+                else:
+                    size[sl] = machines[gi].sizes(
+                        ga - g_start[gi], w[sl], rem[sl], ridx[sl])
                 pos += len(ga)
+            # identity for steal lanes: host grants already satisfy
+            # 1 <= size <= remaining
             size = np.maximum(1, np.minimum(size, rem))
-            start = scheduled[a]
             rem_after = rem - size
             batch = np.empty(len(a), np.int64) if record_chunks else None
             pos = 0
             for gi, ga in segs:
                 sl = slice(pos, pos + len(ga))
+                if steal_g[gi]:
+                    if record_chunks:
+                        # steal grants carry batch == request index
+                        batch[sl] = ridx[sl]
+                    pos += len(ga)
+                    continue
                 b = machines[gi].granted(
                     ga - g_start[gi], w[sl], size[sl], rem_after[sl],
                     ridx[sl])
@@ -719,7 +752,9 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
                     - np.maximum(start, bounds[a, w]), 0)
                 base = base * (1.0 + pen[a] * (1.0 - local / size))
             e = base * speeds[a, w] + cold[a]
-            s = sconst[a]
+            # same float64 operand order as the oracle: s_cost += attempts
+            # * o_steal (the += 0.0 for non-steal lanes is bit-neutral)
+            s = sconst[a] + att * ost[a] if any_steal else sconst[a]
             pos = 0
             for gi, ga in segs:
                 sl = slice(pos, pos + len(ga))
@@ -736,9 +771,15 @@ def _run_lockstep_band(groups: list[list[_ALane]], record_chunks: bool):
             tb[a, w] = tb_base[a] + reqidx[a]
             if record_chunks:
                 for j, li in enumerate(a):
-                    logs[li].append(ChunkGrant(
-                        start=int(start[j]), size=int(size[j]),
-                        batch=int(batch[j]), worker=int(w[j])))
+                    if lane_steal[li]:
+                        logs[li].append(StealGrant(
+                            start=int(start[j]), size=int(size[j]),
+                            batch=int(batch[j]), worker=int(w[j]),
+                            steal_attempts=int(att[j]), victim=int(vic[j])))
+                    else:
+                        logs[li].append(ChunkGrant(
+                            start=int(start[j]), size=int(size[j]),
+                            batch=int(batch[j]), worker=int(w[j])))
             for gi, ga in segs:
                 fin = scheduled[ga] >= n[ga]
                 if fin.any():

@@ -65,9 +65,15 @@ class Plan:
         return loads
 
     def validate(self) -> None:
-        """Every iteration scheduled exactly once, in order, no overlap."""
+        """Every iteration scheduled exactly once, no gap, no overlap.
+
+        Self-scheduling plans emit chunks in ascending-start order, but
+        work-stealing plans (`core/stealing.py`) interleave positions —
+        coverage is therefore checked on the start-sorted sequence, which
+        is the identity permutation for every shared-queue technique.
+        """
         pos = 0
-        for c in self.chunks:
+        for c in sorted(self.chunks, key=lambda c: c.start):
             assert c.start == pos, f"gap/overlap at {c}"
             assert c.size >= 1
             pos += c.size

@@ -57,7 +57,7 @@ __all__ = [
 LB_SCHEDULE_ENV = "LB_SCHEDULE"
 
 #: OpenMP-standard names accepted as aliases for portfolio techniques.
-_ALIASES = {"dynamic": "ss", "guided": "gss"}
+_ALIASES = {"dynamic": "ss", "guided": "gss", "dls+steal": "dls_steal"}
 
 
 def _canon(name: str) -> str:
@@ -94,6 +94,13 @@ class TechniqueSpec:
     #: (paper Sec. 3, "Significance of chunk parameter").  Consumed by the
     #: docs generator so the reference reads this off the registry.
     chunk_exact: bool = False
+    #: work-stealing technique (`core/stealing.py`): per-worker deques
+    #: with victim polling instead of a central chunk queue.  Chunk
+    #: *positions* come from the state machine (grants need not be
+    #: contiguous in request order), the simulators charge ``o_steal``
+    #: per victim probe, and `ClusterRouter` switches to replica-to-
+    #: replica request migration when the node level sets this.
+    stealing: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -495,7 +502,7 @@ def _batch_band(entry: TechniqueEntry) -> str:
     if not (m.adaptive or m.worker_dependent):
         return "plan precompute"
     if entry.step_batch is not None and m.sync != "mutex":
-        return "lockstep (step_batch)"
+        return "lockstep (steal)" if m.stealing else "lockstep (step_batch)"
     return "event oracle"
 
 
@@ -511,6 +518,7 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
     graph = [e.name for e in entries if e.graph is not None]
     adaptive = [e.name for e in entries if e.meta.adaptive]
     stepb = [e.name for e in entries if e.step_batch is not None]
+    steal = [e.name for e in entries if e.meta.stealing]
     lines = [
         "# Technique reference",
         "",
@@ -518,22 +526,25 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         "",
         f"{len(entries)} registered techniques "
         f"({len(paper)} in the paper's LB4OMP set, {len(adaptive)} "
-        f"adaptive, {len(graph)} with an in-graph closed form, "
+        f"adaptive, {len(steal)} in the work-stealing band, "
+        f"{len(graph)} with an in-graph closed form, "
         f"{len(stepb)} with a vectorized `step_batch` form).  Rows are "
         "in registration order — the portfolio order the paper tables "
         "use.  Aliases: "
         + ", ".join(f"`{a}` -> `{t}`" for a, t in sorted(_ALIASES.items()))
         + ".",
         "",
-        "| technique | host class | planning form | batch engine | "
+        "| technique | host class | band | planning form | batch engine | "
         "`chunk_param` | adaptive | profiling | sync | o_cs | worker-dep "
         "| paper set |",
-        "|---|---|---|---|---|---|---|---|---|---|---|",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.meta
         lines.append(
-            f"| `{e.name}` | `{e.cls.__name__}` | {_planning_form(e)} | "
+            f"| `{e.name}` | `{e.cls.__name__}` | "
+            f"{'steal' if m.stealing else 'self-sched'} | "
+            f"{_planning_form(e)} | "
             f"{_batch_band(e)} | "
             f"{_chunk_param_semantics(e)} | "
             f"{'yes' if m.adaptive else 'no'} | "
@@ -554,6 +565,12 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         "builder or a per-request `lax.while_loop` rule (*batched* = the "
         "factoring family, chunk frozen per batch of P requests).  *Host "
         "band* techniques plan through the reference class only.",
+        "- **band** — scheduling paradigm: *self-sched* techniques pull "
+        "chunks from a shared queue governed by a chunk calculus; "
+        "*steal* techniques (`repro.core.stealing`) pre-partition the "
+        "iteration space into per-worker deques and redistribute via "
+        "victim polling, paying `o_steal` per probe instead of per-chunk "
+        "queue synchronization.",
         "- **batch engine** — the band `repro.core.simulate_batch` runs "
         "the technique on: *plan precompute* (chunk sequence is a pure "
         "function of the config — materialized up front, stepped in "

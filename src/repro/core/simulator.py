@@ -57,6 +57,11 @@ class OverheadModel:
     o_mutex_acquire: float = 120e-9  # uncontended lock/unlock pair
     o_unit: float = O_UNIT         # multiplier for TechniqueSpec.o_cs
     o_dispatch: float = 60e-9      # fixed RTL dispatch path cost / request
+    #: one work-stealing victim probe (remote CAS + cache-line transfer on
+    #: the victim's deque anchor) — charged per *attempt*, failed probes
+    #: included, for steal-band grants (`core/stealing.py`); the local-pop
+    #: common case pays only o_dispatch + o_cs, never this
+    o_steal: float = 250e-9
 
     def sync_cost(self, sync: str) -> float:
         if sync == "none":
@@ -293,6 +298,11 @@ def simulate(
                 # shared counter (the mFAC reformulation, Sec. 3.1 — "more
                 # computation, cheaper synchronization")
                 s_cost += o_calc
+            # steal-band grants: every victim probe (failed or not) pays
+            # the steal latency on top of the local bookkeeping
+            attempts = getattr(grant, "steal_attempts", 0)
+            if attempts:
+                s_cost += attempts * overhead.o_steal
 
             # --- execution --------------------------------------------------
             lo, hi = grant.start, grant.start + grant.size

@@ -511,7 +511,9 @@ class BOLD(Technique):
             self.sigma = math.sqrt(self._welford_m2 / (self._welford_n - 1))
 
     def inherit(self, other: Technique) -> None:
-        if not isinstance(other, BOLD) or other.p != self.p:
+        # mu/sigma/h and the Welford accumulator are global (per-
+        # iteration) statistics, so they survive a change of p unchanged
+        if not isinstance(other, BOLD):
             return
         self.mu, self.sigma, self.h = other.mu, other.sigma, other.h
         self._welford_n = other._welford_n
@@ -596,14 +598,33 @@ class _AWFBase(_FactoringBase):
         super()._on_begin_instance()
 
     def inherit(self, other: Technique) -> None:
-        if not isinstance(other, _AWFBase) or other.p != self.p:
+        if not isinstance(other, _AWFBase):
             return
-        self.weights = other.weights.copy()
-        self._sum_time = other._sum_time.copy()
-        self._sum_size = other._sum_size.copy()
-        self._wap_num = other._wap_num.copy()
-        self._wap_den = other._wap_den.copy()
+        if other.p == self.p:
+            self.weights = other.weights.copy()
+            self._sum_time = other._sum_time.copy()
+            self._sum_size = other._sum_size.copy()
+            self._wap_num = other._wap_num.copy()
+            self._wap_den = other._wap_den.copy()
+            self._adapt_k = other._adapt_k
+            return
+        # elastic re-plan over a changed worker count (shrink/grow):
+        # workers 0..k-1 keep their measured rate history; on grow, the
+        # unseen workers start from the mean inherited wap (a neutral
+        # prior — no measured worker is penalized for the newcomers),
+        # and the weights renormalize to sum to the new p
+        k = min(self.p, other.p)
+        for name in ("_sum_time", "_sum_size", "_wap_num", "_wap_den"):
+            getattr(self, name)[:k] = getattr(other, name)[:k]
         self._adapt_k = other._adapt_k
+        seen = other._wap_den[:k] > 0
+        if self.p > other.p and np.any(seen):
+            wap = other._wap_num[:k][seen] / other._wap_den[:k][seen]
+            self._wap_num[k:] = float(wap.mean())
+            self._wap_den[k:] = 1.0
+        w = np.ones(self.p)
+        w[:k] = other.weights[:k]
+        self.weights = self.p * w / w.sum()
 
 
 @register_technique(paper_set=True)
@@ -706,11 +727,20 @@ class AF(Technique):
         self._m2[worker] += k * d * (per_iter - self._mean[worker])
 
     def inherit(self, other: Technique) -> None:
-        if not isinstance(other, AF) or other.p != self.p:
+        if not isinstance(other, AF):
             return
-        self._cnt = other._cnt.copy()
-        self._mean = other._mean.copy()
-        self._m2 = other._m2.copy()
+        if other.p == self.p:
+            self._cnt = other._cnt.copy()
+            self._mean = other._mean.copy()
+            self._m2 = other._m2.copy()
+            return
+        # elastic re-plan: carry the surviving workers' per-iteration
+        # estimators; added workers stay at cnt == 0, so AF's warm-up
+        # round (fixed chunks of 10, Sec. 4.4) reruns for exactly them
+        k = min(self.p, other.p)
+        self._cnt[:k] = other._cnt[:k]
+        self._mean[:k] = other._mean[:k]
+        self._m2[:k] = other._m2[:k]
 
 
 @register_technique(paper_set=True)

@@ -93,6 +93,17 @@ class ClusterRouter:
     chunk (sum of per-slot service time, or decode steps on a real
     engine — any monotone unit), which is what lets AWF/AF node weights
     converge toward replica speed ratios under heterogeneity.
+
+    A *steal-band* node schedule (``TechniqueSpec.stealing``, e.g.
+    ``"ws_rr,4/fac2"``) switches the router to replica-to-replica request
+    migration — node-level work stealing, the missing half of the
+    arXiv:1911.06714 two-level design.  Each planning wave freezes the
+    backlog into a snapshot partitioned across per-replica deques; a
+    replica's pull pops requests pre-assigned to *it*, and once its deque
+    drains the steal protocol serves it requests originally assigned to a
+    busier replica — ``migrated_requests`` counts those.  Steal
+    techniques are non-adaptive, so ``complete`` measurements update the
+    telemetry counters only.
     """
 
     def __init__(self, num_replicas: int,
@@ -101,20 +112,53 @@ class ClusterRouter:
         if num_replicas <= 0:
             raise ValueError(f"need num_replicas > 0, got {num_replicas}")
         self.num_replicas = num_replicas
-        self.sched = RequestScheduler(num_workers=num_replicas,
-                                      technique=schedule,
-                                      chunk_param=chunk_param)
-        self.spec = self.sched.spec
+        spec = resolve(schedule, default="fac2", chunk_param=chunk_param)
+        self._steal = bool(spec.meta.stealing)
+        if self._steal:
+            self.sched = None
+            self.spec = spec
+            self._pending: list[Request] = []
+            self._snapshot: list[Request] = []
+            self._stech = None
+            self._plan_gen = 0
+            self.migrated_requests = 0
+        else:
+            self.sched = RequestScheduler(num_workers=num_replicas,
+                                          technique=spec)
+            self.spec = self.sched.spec
         # per-replica cumulative telemetry (the ClusterRecord inputs)
         self.replica_busy = np.zeros(num_replicas)
         self.replica_requests = np.zeros(num_replicas, dtype=np.int64)
         self.node_chunks = 0
 
     def submit(self, req: Request) -> None:
-        self.sched.submit(req)
+        if self._steal:
+            self._pending.append(req)
+        else:
+            self.sched.submit(req)
+
+    def _steal_pull(self, replica: int) -> list[Request]:
+        tech = self._stech
+        if tech is None or tech.remaining <= 0:
+            if not self._pending:
+                return []
+            # freeze the backlog: one steal plan per wave, grants index
+            # the snapshot — request identity is preserved, so a grant
+            # served off another replica's deque IS a migrated request
+            self._snapshot = self._pending
+            self._pending = []
+            tech = self._stech = self.spec.make(
+                n=len(self._snapshot), p=self.num_replicas)
+            self._plan_gen += 1
+            tech.begin_instance(self._plan_gen)
+        g = tech.next_chunk(replica)
+        if getattr(g, "victim", -1) >= 0:
+            self.migrated_requests += g.size
+        return self._snapshot[g.start:g.start + g.size]
 
     def pull(self, replica: int) -> list[Request]:
-        chunk = self.sched.pull(replica)
+        chunk = (self._steal_pull(replica) if self._steal
+                 else self.sched.pull(replica))
         if chunk:
             self.node_chunks += 1
             self.replica_requests[replica] += len(chunk)
@@ -122,15 +166,21 @@ class ClusterRouter:
 
     def complete(self, replica: int, busy: float) -> None:
         self.replica_busy[replica] += float(busy)
-        self.sched.complete(replica, elapsed=float(busy))
+        if not self._steal:
+            self.sched.complete(replica, elapsed=float(busy))
 
     @property
     def backlog(self) -> int:
+        if self._steal:
+            live = 0 if self._stech is None else max(0, self._stech.remaining)
+            return live + len(self._pending)
         return self.sched.backlog
 
     @property
     def node_weights(self) -> Optional[np.ndarray]:
         """Current adaptive per-replica weights (AWF family), else None."""
+        if self.sched is None:
+            return None
         tech = self.sched._tech
         w = getattr(tech, "weights", None)
         return None if w is None else np.asarray(w, dtype=np.float64)
@@ -241,6 +291,7 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
     busy0 = router.replica_busy.copy()
     requests0 = router.replica_requests.copy()
     chunks0 = router.node_chunks
+    migrated0 = getattr(router, "migrated_requests", 0)
     clocks = [np.zeros(workers_per_replica) for _ in range(num_replicas)]
     intra = [RequestScheduler(num_workers=workers_per_replica,
                               technique=spec.thread)
@@ -305,6 +356,10 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
         node_technique=str(spec.node),
         thread_technique=str(spec.thread),
         node_weights=None if weights is None else weights.tolist(),
+        # steal-band node level only: requests served off another
+        # replica's deque this call (None == self-scheduling node level)
+        migrated_requests=(
+            router.migrated_requests - migrated0 if router._steal else None),
     )
     if not done:
         out.update(mean_latency=0.0, p50=0.0, p99=0.0)

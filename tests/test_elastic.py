@@ -1,0 +1,139 @@
+"""Elastic re-plan regression tests: ``Technique.inherit`` across a
+*changing* worker count (the ROADMAP elasticity item, demonstrated by
+``examples/elastic_restart.py``).
+
+The serving scheduler and cluster router rebuild their technique over a
+refreshed backlog with ``new.inherit(old)``; when a pod is lost (shrink)
+or added (grow), the adaptive state must carry for the surviving workers
+instead of silently resetting — and must stay byte-identical to the old
+behavior when p is unchanged.
+"""
+
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import make_technique
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def _train(tech, p, speeds, rounds=4):
+    """Feed a few measured chunks: worker w runs at speeds[w] sec/iter."""
+    for i in range(rounds * p):
+        w = i % p
+        g = tech.next_chunk(w)
+        if g is None:
+            break
+        tech.complete_chunk(w, g, exec_time=g.size * speeds[w],
+                            sched_time=1e-6)
+    return tech
+
+
+def _trained_awf(p, n=4000):
+    t = make_technique("awf_b", n=n, p=p)
+    t.begin_instance(0)
+    # worker 0 fast, last worker slow — weights must order accordingly
+    _train(t, p, speeds=1e-3 * (1.0 + np.arange(p)))
+    return t
+
+
+@pytest.mark.parametrize("old_p,new_p", [(4, 3), (4, 6), (8, 2)])
+def test_awf_inherit_across_p_change(old_p, new_p):
+    old = _trained_awf(old_p)
+    assert old.weights[0] > old.weights[min(old_p, new_p) - 1]
+    new = make_technique("awf_b", n=2000, p=new_p)
+    new.inherit(old)
+    k = min(old_p, new_p)
+    # surviving workers keep their measured-rate telemetry
+    np.testing.assert_array_equal(new._sum_time[:k], old._sum_time[:k])
+    np.testing.assert_array_equal(new._wap_num[:k], old._wap_num[:k])
+    assert new._adapt_k == old._adapt_k
+    # weights stay a valid AWF weight vector over the *new* p ...
+    assert new.weights.shape == (new_p,)
+    assert new.weights.sum() == pytest.approx(new_p)
+    assert (new.weights > 0).all()
+    # ... and preserve the learned ordering among survivors
+    assert new.weights[0] > new.weights[k - 1]
+    if new_p > old_p:
+        # grown workers carry a neutral measured-rate prior, so the next
+        # adaptation point treats them as average, not infinitely fast
+        assert (new._wap_den[old_p:] > 0).all()
+    # the resized technique still schedules a full loop
+    new.begin_instance(1)
+    total = 0
+    i = 0
+    while True:
+        g = new.next_chunk(i % new_p)
+        if g is None:
+            break
+        total += g.size
+        i += 1
+    assert total == 2000
+
+
+def test_awf_inherit_same_p_unchanged():
+    """Equal-p handoff stays an exact copy (the serving-path contract)."""
+    old = _trained_awf(4)
+    new = make_technique("awf_b", n=999, p=4)
+    new.inherit(old)
+    np.testing.assert_array_equal(new.weights, old.weights)
+    np.testing.assert_array_equal(new._sum_time, old._sum_time)
+    np.testing.assert_array_equal(new._wap_den, old._wap_den)
+
+
+@pytest.mark.parametrize("old_p,new_p", [(4, 3), (3, 5)])
+def test_af_inherit_across_p_change(old_p, new_p):
+    old = make_technique("af", n=4000, p=old_p, mu=1e-3, sigma=4e-4, h=1e-6)
+    old.begin_instance(0)
+    _train(old, old_p, speeds=np.full(old_p, 1e-3))
+    assert (old._cnt > 0).any()
+    new = make_technique("af", n=2000, p=new_p, mu=1e-3, sigma=4e-4, h=1e-6)
+    new.inherit(old)
+    k = min(old_p, new_p)
+    np.testing.assert_array_equal(new._cnt[:k], old._cnt[:k])
+    np.testing.assert_array_equal(new._mean[:k], old._mean[:k])
+    if new_p > old_p:
+        # added workers rerun AF's warm-up (chunks of 10, Sec. 4.4)
+        assert (new._cnt[old_p:] == 0).all()
+        new.begin_instance(1)
+        g = new.next_chunk(new_p - 1)
+        assert g.size == 10
+
+
+def test_bold_inherit_across_p_change():
+    old = make_technique("bold", n=4000, p=4, mu=1e-3, sigma=4e-4, h=1e-6)
+    old.begin_instance(0)
+    _train(old, 4, speeds=np.full(4, 1e-3))
+    new = make_technique("bold", n=2000, p=3, mu=1.0, sigma=1.0, h=1.0)
+    new.inherit(old)
+    # the global per-iteration statistics transfer verbatim
+    assert new.mu == old.mu and new.sigma == old.sigma and new.h == old.h
+    assert new._welford_n == old._welford_n
+
+
+def test_elastic_restart_example_handoff():
+    """The example's no-jax path: replan + inherit across 4 -> 3."""
+    spec = importlib.util.spec_from_file_location(
+        "elastic_restart", EXAMPLES / "elastic_restart.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    new_plan, old, new = mod.elastic_handoff(
+        n=1000, old_p=4, new_p=3, technique="awf_b", chunks_done=10)
+    assert new_plan.p == 3
+    loads = new_plan.worker_loads()
+    assert loads.sum() == new_plan.n
+    # the shifted tail tiles [done, 1000) exactly — every remaining
+    # iteration rescheduled exactly once
+    starts = sorted((c.start, c.size) for c in new_plan.chunks)
+    pos = starts[0][0]
+    for st, sz in starts:
+        assert st == pos
+        pos += sz
+    assert pos == 1000
+    assert old.p == 4 and new.p == 3
+    assert new.weights.sum() == pytest.approx(3)
+    # the learned fast->slow ordering survives the shrink
+    assert new.weights[0] == new.weights.max()

@@ -48,6 +48,16 @@ def test_chunk_param_threshold_semantics(name):
         post = sizes[p:]
         assert all(s >= min(cp, 10) or s <= 10 for s in sizes)
         assert all(s >= cp for s in post[:-p] if s != 10), sizes[:30]
+    elif TECHNIQUES[name].spec.stealing:
+        # steal band: chunk_param is the pop/steal *grain* — every grant
+        # is min(cp, deque-segment remainder), so cp bounds from above
+        # (deque tails go below it, like static's final remainder).  The
+        # dls_steal hybrid pops whole planned chunks (fac2 threshold
+        # semantics) until steal-half starts splitting segments.
+        if TECHNIQUES[name].spec.chunk_exact:
+            assert all(s <= cp for s in sizes)
+            assert max(sizes) == cp
+        assert sum(sizes) == n
     else:
         # all but possibly the final remainder respect the threshold
         assert all(s >= cp for s in sizes[:-1]), (name, sizes[:10], sizes[-5:])
