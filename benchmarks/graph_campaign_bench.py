@@ -1,0 +1,169 @@
+"""Jitted graph-campaign engine vs NumPy lockstep on the adaptive grid.
+
+The third engine derived from the TechniqueDefs
+(``repro.core.graph_sim.simulate_batch_graph``) runs each (technique, p)
+group of an adaptive campaign as ONE compiled XLA program — dense (L, p)
+lane state, a ``lax.while_loop`` over chunk rounds — where the host
+lockstep band steps the same lanes one NumPy round at a time from the
+Python interpreter.  This benchmark times the same adaptive technique x
+workload x chunk-param x repetition grid through both engines (compile
+excluded: both sides are warmed on the full grid first, and the one-off
+trace/compile cost is reported separately), verifies agreement — graph
+results are bit-exact against the lockstep band except BOLD's documented
+log-ulp tolerance (see ``core/graph_sim.py``) — AND that no config fell
+back off the graph band, then records the wall-clock ratio under
+benchmarks/results/ so the perf trajectory accumulates run over run.
+
+    PYTHONPATH=src python -m benchmarks.graph_campaign_bench \
+        [--quick] [--reps N] [--min-speedup X]
+
+Under ``--quick`` the run gates CI: it fails unless the jitted engine
+beats the NumPy lockstep band by the --min-speedup floor (default 2x on
+CPU; the margin grows with grid depth, which is the campaign regime the
+engine exists for).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import (
+    NOISY_PROFILE,
+    batch_grid,
+    dist_loop,
+    gromacs_like,
+    nab_like,
+    simulate_batch,
+    simulate_batch_graph,
+    sphynx_like,
+)
+
+from .common import RESULTS
+
+P = 20
+TIMESTEPS = 2
+
+#: the graph band: every TechniqueDef-generated technique (the adaptive
+#: family), each carrying a campaign graph form
+GRAPH_TECHS = ("awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf",
+               "bold", "wf2")
+
+
+def campaign_grid(n: int = 100_000, reps: int = 10):
+    """Same shape as adaptive_bench's grid: band x 4 loop classes x
+    3 cps x reps — the multi-chunk-param sweep of the paper's Sec. 4
+    protocol, with timesteps=2 so adaptive state carries across
+    instances."""
+    loops = [sphynx_like(n=n), gromacs_like(n=n),
+             dist_loop("L1", n=max(n // 100, 100)), nab_like()]
+    return batch_grid(GRAPH_TECHS, loops, ps=(P,),
+                      chunk_params=(None, 16, 64),
+                      seeds=tuple(range(reps)),
+                      chunk_cold_cost=2e-6, timesteps=TIMESTEPS)
+
+
+def run(n: int = 100_000, reps: int = 10) -> dict:
+    configs = campaign_grid(n=n, reps=reps)
+
+    # Warm both engines on the full grid: the graph side traces+compiles
+    # one program per (technique, p) group keyed also by array shapes,
+    # so only the identical grid reuses the cache.  The first call's
+    # wall time is the one-off compile cost, reported (not gated).
+    t0 = time.perf_counter()
+    simulate_batch_graph(configs, profile=NOISY_PROFILE, strict=True)
+    t_compile = time.perf_counter() - t0
+    simulate_batch(configs, profile=NOISY_PROFILE)
+
+    t0 = time.perf_counter()
+    graph = simulate_batch_graph(configs, profile=NOISY_PROFILE,
+                                 strict=True)
+    t_graph = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    host = simulate_batch(configs, profile=NOISY_PROFILE)
+    t_host = time.perf_counter() - t0
+
+    fallbacks = sum(r.engine_used != "graph"
+                    for g in graph for r in g)
+    mismatches = 0
+    for cfg, g, h in zip(configs, graph, host):
+        for rg, rh in zip(g, h):
+            if cfg.technique == "bold":
+                ok = bool(np.isclose(rg.record.t_par, rh.record.t_par,
+                                     rtol=1e-9))
+            else:
+                ok = rg.record.t_par == rh.record.t_par
+            mismatches += not ok
+    return dict(
+        name="graph_campaign/adaptive_grid",
+        grid_configs=len(configs),
+        techniques=len(GRAPH_TECHS),
+        workloads=4,
+        chunk_params=3,
+        reps=reps,
+        timesteps=TIMESTEPS,
+        n=n,
+        p=P,
+        t_lockstep_s=round(t_host, 3),
+        t_graph_s=round(t_graph, 3),
+        t_compile_s=round(t_compile, 3),
+        speedup=round(t_host / t_graph, 1),
+        agreement_mismatches=mismatches,
+        graph_fallbacks=fallbacks,
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    )
+
+
+def rows(n: int = 100_000, reps: int = 10) -> list[dict]:
+    """benchmarks.run entry point (name,us_per_call,derived rows)."""
+    r = run(n=n, reps=reps)
+    r["us_per_call"] = r["t_graph_s"] * 1e6 / max(r["grid_configs"], 1)
+    return [r]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI (writes graph_campaign_"
+                         "quickbench.json and gates on --min-speedup)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="repetitions per config (default 10, quick 4)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail unless graph/lockstep speedup >= this "
+                         "(default: 2.0 under --quick, no gate otherwise)")
+    args = ap.parse_args()
+    reps = args.reps if args.reps is not None else (4 if args.quick else 10)
+    n = 20_000 if args.quick else 100_000
+    floor = args.min_speedup
+    if floor is None and args.quick:
+        floor = 2.0
+    result = run(n=n, reps=reps)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / ("graph_campaign_quickbench.json" if args.quick
+                     else "graph_campaign.json")
+    history = []
+    if out.exists():
+        prev = json.loads(out.read_text())
+        history = prev if isinstance(prev, list) else [prev]
+    history.append(result)
+    out.write_text(json.dumps(history, indent=1))
+    print(json.dumps(result, indent=2))
+    if result["agreement_mismatches"]:
+        raise SystemExit("graph band disagrees with the lockstep band")
+    if result["graph_fallbacks"]:
+        raise SystemExit("graph-band configs fell back to the host engine")
+    if floor is not None and result["speedup"] < floor:
+        raise SystemExit(
+            f"graph-campaign speedup {result['speedup']}x is below the "
+            f"{floor}x floor")
+
+
+if __name__ == "__main__":
+    main()

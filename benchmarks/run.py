@@ -17,8 +17,8 @@ import sys
 import time
 
 from . import (adaptive_bench, batch_bench, cluster_balance,
-               framework_bench, kernel_sched_bench, paper_campaign,
-               steal_bench)
+               framework_bench, graph_campaign_bench, kernel_sched_bench,
+               paper_campaign, steal_bench)
 from .common import RESULTS, emit
 
 
@@ -82,6 +82,8 @@ def main() -> None:
         "batch_speedup_quick": lambda: batch_bench.rows(
             n=n_small, reps=3 if args.fast else 10),
         "adaptive_speedup_quick": lambda: adaptive_bench.rows(
+            n=n_small, reps=3 if args.fast else 10),
+        "graph_campaign_quick": lambda: graph_campaign_bench.rows(
             n=n_small, reps=3 if args.fast else 10),
         "kernel_sched": kernel_sched_bench.rows,
         # quick-sized; named so emit() doesn't overwrite the committed

@@ -60,4 +60,6 @@ from .planner import Plan, PlannedChunk, plan_schedule, replan  # noqa: F401
 from .batch_sim import BatchConfig, batch_grid, simulate_batch  # noqa: F401
 from . import jax_sched  # noqa: F401
 from .jax_sched import KernelTilePlan, plan_tiles_for_kernel  # noqa: F401
+from . import graph_sim  # noqa: F401  (binds the campaign graph forms)
+from .graph_sim import simulate_batch_graph  # noqa: F401
 from .auto import AutoSelector, auto_simulate, registry_candidates  # noqa: F401

@@ -190,9 +190,18 @@ def auto_simulate(
     NOTE: adaptive techniques restart their state on re-selection (a
     selector switch is a new execution context) — matching how a runtime
     would swap OMP_SCHEDULE between time-steps.
+
+    ``engine="graph"`` batches the same way but evaluates the grid with
+    the jitted in-graph campaign engine
+    (:func:`repro.core.graph_sim.simulate_batch_graph`): adaptive arms
+    run inside one compiled program per (technique, p) group, and
+    everything else falls back to the host bands.  Graph-band results
+    match the host engines bit-exactly for p < 8 (see the cross-form
+    tolerance notes in `core/graph_sim.py`).
     """
-    if engine not in ("event", "batch"):
-        raise ValueError(f"engine must be 'event' or 'batch', got {engine!r}")
+    if engine not in ("event", "batch", "graph"):
+        raise ValueError(
+            f"engine must be 'event', 'batch', or 'graph', got {engine!r}")
     sel = selector or AutoSelector()
     history: list[dict] = []
 
@@ -208,12 +217,18 @@ def auto_simulate(
                         perturb=perturb, seed=seed + ts0 + k)
             for k, s in enumerate(specs)
         ]
-        results = simulate_batch(configs, overhead=overhead, profile=profile)
+        if engine == "graph":
+            from .graph_sim import simulate_batch_graph
+            results = simulate_batch_graph(configs, overhead=overhead,
+                                           profile=profile)
+        else:
+            results = simulate_batch(configs, overhead=overhead,
+                                     profile=profile)
         for s, res in zip(specs, results):
             _record(s, res[0].record)
 
     start = 0
-    if engine == "batch":
+    if engine in ("batch", "graph"):
         prefix = _deterministic_prefix(sel, timesteps)
         _run_batch([sel.candidates[i] for i in prefix], 0)
         start = len(prefix)

@@ -59,6 +59,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import math
+import warnings
 from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
@@ -858,7 +859,44 @@ def _copy_result(res: SimResult) -> SimResult:
             chunks=None if r.chunks is None else list(r.chunks),
         ),
         technique=res.technique,
+        engine_used=res.engine_used,
     )
+
+
+def _oracle_fallback_reason(cfg: BatchConfig, spec: Optional[ScheduleSpec],
+                            fast_engine: str) -> Optional[str]:
+    """Why a config that *looks* eligible for a vectorized band lands on
+    the event oracle — None when the oracle routing is intentional
+    (non-adaptive plan-band configs never hit this: they take the plan
+    band, and a plan-band config reaching the oracle is always one of the
+    causes below)."""
+    if isinstance(cfg.technique, Technique):
+        return ("prebuilt Technique instance (host state machines cannot "
+                "be vectorized)")
+    if _stateful_perturb(cfg.perturb):
+        return ("3-arg stateful perturb callback (per-chunk rng draws "
+                "must replay in event order)")
+    meta = spec.meta
+    if spec.entry.step_batch is None:
+        return (f"technique {spec.technique!r} has no step_batch form "
+                f"(bind one with repro.core.schedule.bind_step_batch)")
+    if meta.sync == "mutex":
+        return (f"technique {spec.technique!r} uses mutex sync (the "
+                f"{fast_engine} band models the atomic request path)")
+    return None  # pragma: no cover - routing covers all causes above
+
+
+def _note_fallback(strict, engine: str, reason: str) -> None:
+    """Apply the ``strict`` knob to one silent-fallback event."""
+    msg = (f"simulate_batch: config falls back to the event oracle "
+           f"instead of the {engine} band: {reason}")
+    if strict is True:
+        raise RuntimeError(msg)
+    if strict == "warn":
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    elif strict is not False:
+        raise ValueError(
+            f"strict must be False, 'warn', or True, got {strict!r}")
 
 
 def simulate_batch(
@@ -868,6 +906,7 @@ def simulate_batch(
     profile: ProfileModel = EXACT_PROFILE,
     recorder: Optional[LoopRecorder] = None,
     record_chunks: bool = False,
+    strict=False,
 ) -> list[list[SimResult]]:
     """Simulate a grid of configurations in one vectorized pass.
 
@@ -885,7 +924,18 @@ def simulate_batch(
     (e.g. the statistical-repetition seed axis on a technique that never
     reads the seed) are computed once and shared; ``recorder`` still
     receives one record per (config, timestep), in config order.
+
+    Every returned result is tagged with the engine that produced it
+    (``SimResult.engine_used``: ``"plan"``, ``"lockstep"``, or
+    ``"event"``).  ``strict`` controls how a fallback to the per-chunk
+    event oracle is reported: ``False`` (default) is silent, ``"warn"``
+    emits a ``RuntimeWarning`` naming the config's reason, ``True``
+    raises ``RuntimeError`` — so campaign callers scaling to large grids
+    can detect the slow path instead of discovering it in wall-clock.
     """
+    if strict not in (False, "warn", True):
+        raise ValueError(
+            f"strict must be False, 'warn', or True, got {strict!r}")
     results: list[Optional[list[SimResult]]] = [None] * len(configs)
     fast_lanes: list[_Lane] = []
     step_lanes: list[_ALane] = []
@@ -897,6 +947,7 @@ def simulate_batch(
         ov = cfg.overhead if cfg.overhead is not None else overhead
         prof = cfg.profile if cfg.profile is not None else profile
         band = "oracle"
+        spec = None
         if not isinstance(cfg.technique, Technique):
             spec = resolve(cfg.technique, chunk_param=cfg.chunk_param)
             if cfg.workload.n <= 0 or cfg.p <= 0:
@@ -923,6 +974,10 @@ def simulate_batch(
                     aliases[ci] = prev
                     continue
         if band == "oracle":
+            if strict is not False:
+                reason = _oracle_fallback_reason(cfg, spec, "lockstep")
+                if reason is not None:
+                    _note_fallback(strict, "lockstep", reason)
             results[ci] = simulate(
                 cfg.technique, cfg.workload, cfg.p, cfg.chunk_param,
                 timesteps=cfg.timesteps, speeds=cfg.speeds,
@@ -981,7 +1036,8 @@ def simulate_batch(
                 sched_time=float(sched.sum()),
                 chunks=chunks,
             )
-            results[lane.config_idx][lane.instance] = SimResult(record=rec)
+            results[lane.config_idx][lane.instance] = SimResult(
+                record=rec, engine_used="plan")
 
     # lockstep (adaptive) band: lanes grouped by (technique, p) — one
     # vectorized machine per group (reductions over exactly p contiguous
@@ -1010,7 +1066,8 @@ def simulate_batch(
                     sched_time=float(sched.sum()),
                     chunks=chunks,
                 )
-                results[alane.config_idx][ts] = SimResult(record=rec)
+                results[alane.config_idx][ts] = SimResult(
+                    record=rec, engine_used="lockstep")
 
     for ci, prev in aliases.items():
         results[ci] = [_copy_result(r) for r in results[prev]]

@@ -295,8 +295,17 @@ def plan_chunks(
     if graph is None:
         raise KeyError(
             f"plan_chunks: unsupported technique {t!r}; in-graph forms exist "
-            f"for {sorted(REGISTRY.graph_names())} (bind one with "
-            f"repro.core.schedule.bind_graph_form)")
+            f"for {sorted(REGISTRY.graph_names(plannable=True))} (bind one "
+            f"with repro.core.schedule.bind_graph_form)")
+    if graph.builder is None and graph.next_size is None:
+        # campaign (step-only) form: the chunk sequence depends on
+        # measured telemetry, so there is no up-front schedule to plan
+        raise KeyError(
+            f"plan_chunks: technique {t!r} has a campaign (step-only) graph "
+            f"form — its chunk sequence depends on runtime measurements; "
+            f"run it with repro.core.graph_sim.simulate_batch_graph; "
+            f"plannable techniques: "
+            f"{sorted(REGISTRY.graph_names(plannable=True))}")
 
     if max_chunks is not None and max_chunks < 1:
         raise ValueError(f"max_chunks must be >= 1, got {max_chunks}")

@@ -43,13 +43,16 @@ __all__ = [
     "LB_SCHEDULE_ENV",
     "ScheduleSpec",
     "TechniqueSpec",
+    "TechniqueDef",
     "GraphForm",
     "TechniqueEntry",
     "TechniqueRegistry",
     "REGISTRY",
     "register_technique",
     "bind_graph_form",
+    "bind_graph_step",
     "bind_step_batch",
+    "bind_techdef",
     "resolve",
 ]
 
@@ -105,7 +108,7 @@ class TechniqueSpec:
 
 @dataclasses.dataclass(frozen=True)
 class GraphForm:
-    """In-graph (jit-compatible) closed form of a technique's chunk calculus.
+    """In-graph (jit-compatible) form of a technique's chunk calculus.
 
     Either a full ``builder(ctx) -> (sizes, starts, count)`` for techniques
     whose schedule has a direct array form, or a per-request
@@ -115,12 +118,84 @@ class GraphForm:
     ``max_chunks(n, p, chunk_param)`` overrides the default padding bound
     for techniques whose round count the generic geometric estimate
     underestimates (e.g. linear-taper plugins).
+
+    ``step`` is the *campaign* form: a jit-traceable per-round step for the
+    adaptive/worker-dependent band, consumed by the ``lax.scan`` engine in
+    ``core/graph_sim.simulate_batch_graph``.  A step-only form (``builder``
+    and ``next_size`` both None) cannot plan a schedule up front — the
+    chunk sequence depends on measured telemetry — so ``plan_chunks`` keeps
+    raising ``KeyError`` for it; only the campaign engine uses it.
     """
 
     builder: Optional[Callable[..., Any]] = None
     next_size: Optional[Callable[..., Any]] = None
     batched: bool = False
     max_chunks: Optional[Callable[[int, int, int], int]] = None
+    step: Optional[Any] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TechniqueDef:
+    """One *form-generating* definition of a technique's chunk calculus.
+
+    The adaptive/worker-dependent family (AWF variants, AF, mAF, BOLD,
+    WF2) defines its recurrence exactly once here — state init, chunk-size
+    rule, completion update, and adaptation — expressed over a small
+    numeric-ops façade (``ops``) so the same callables run as:
+
+    - the scalar host ``Technique`` class (NumPy ``(p,)`` state),
+    - the lockstep ``step_batch`` machine (``(L, p)`` lane-dense state),
+    - the in-graph campaign form (jax arrays under ``vmap``/``lax.scan``).
+
+    All three forms are derived by ``repro.core.techniques`` (scalar +
+    batch) and ``repro.core.graph_sim`` (graph); registering the def via
+    :func:`bind_techdef` is what makes a technique eligible for the
+    jitted campaign engine.
+
+    Callable signatures (``st`` is a mutable state mapping; values are
+    rebound, never mutated in place, so jax tracing works):
+
+    - ``init_state(p, kw) -> dict`` — fresh per-instance adaptive state;
+      validates user kwargs (e.g. WF2's weight vector) for every form.
+    - ``chunk_size(ops, st, worker, remaining, p, batch_chunk) -> c`` —
+      the *raw* chunk-calculus value; each deriver applies the common
+      ``max(1, ceil(c))`` + chunk-param threshold + remaining clamp.
+    - ``on_complete(ops, st, worker, size, t, p)`` — fold one measured
+      chunk (``t`` already includes scheduling overhead iff
+      ``include_overhead``) into the state.
+    - ``adapt(ops, st, p)`` — the cadence-triggered weight update.
+    - ``host_inherit(self, other)`` — elastic handoff on the scalar class.
+    - ``max_chunks(n, p, chunk_param) -> int`` — sound bound on the number
+      of grants any single instance can issue (jax_sched padding).
+
+    ``family`` groups variants sharing state layout (all AWF cadences are
+    ``"awf"``; AF and mAF are ``"af"``) — ``inherit`` matches on it.
+    ``factoring`` selects the FAC2 batch rule for ``batch_chunk``;
+    ``cadence`` is when ``adapt`` fires (``"timestep"``/``"batch"``/
+    ``"chunk"``/``"none"``); ``warmup_chunk`` > 0 is AF's fixed-size
+    warm-up grant (bypasses the chunk-param threshold) issued while
+    ``warming(ops, st, worker)`` holds — a *state-dependent* predicate
+    (AF warms until every worker has one timing), not a request-count
+    cutoff; ``lanewise`` forces the batch band to step lanes one-by-one
+    with scalar math so ``math.log`` rounding matches the scalar form
+    (BOLD).
+    """
+
+    spec: TechniqueSpec
+    family: str
+    init_state: Callable[..., dict]
+    chunk_size: Callable[..., Any]
+    factoring: bool = False
+    cadence: str = "none"  # "timestep" | "batch" | "chunk" | "none"
+    include_overhead: bool = False
+    on_complete: Optional[Callable[..., Any]] = None
+    adapt: Optional[Callable[..., Any]] = None
+    warmup_chunk: int = 0
+    warming: Optional[Callable[..., Any]] = None
+    lanewise: bool = False
+    host_inherit: Optional[Callable[..., Any]] = None
+    max_chunks: Optional[Callable[[int, int, int], int]] = None
+    doc: str = ""
 
 
 @dataclasses.dataclass
@@ -133,6 +208,11 @@ class TechniqueEntry:
     this technique one chunk round at a time with dense per-lane state
     (see :class:`repro.core.techniques.BatchTechnique`).  Bound with
     :func:`bind_step_batch`, next to the in-graph :class:`GraphForm`.
+
+    ``techdef`` is the single form-generating :class:`TechniqueDef` the
+    scalar class, the ``step_batch`` machine, and the in-graph campaign
+    form were derived from (None for techniques still defined as
+    hand-written classes, e.g. the non-adaptive plan band).
     """
 
     name: str
@@ -141,6 +221,7 @@ class TechniqueEntry:
     graph: Optional[GraphForm] = None
     step_batch: Optional[Callable] = None
     paper_set: bool = False  # one of the paper's 14 LB4OMP additions
+    techdef: Optional[TechniqueDef] = None
 
 
 class TechniqueRegistry(Mapping):
@@ -205,12 +286,44 @@ class TechniqueRegistry(Mapping):
                         builder: Optional[Callable] = None,
                         next_size: Optional[Callable] = None,
                         batched: bool = False,
-                        max_chunks: Optional[Callable] = None) -> None:
-        """Attach/replace the in-graph closed form for a registered name."""
-        if builder is None and next_size is None:
-            raise ValueError("bind_graph_form needs builder or next_size")
+                        max_chunks: Optional[Callable] = None,
+                        step: Optional[Any] = None) -> None:
+        """Attach/replace the in-graph form for a registered name.
+
+        A plan form (``builder`` or ``next_size``) makes the technique
+        plannable via ``jax_sched.plan_chunks``; a step-only form
+        (``step`` alone) makes it runnable by the campaign engine
+        (``graph_sim.simulate_batch_graph``) without becoming plannable.
+        """
+        if builder is None and next_size is None and step is None:
+            raise ValueError(
+                "bind_graph_form needs builder, next_size, or step")
         self[name].graph = GraphForm(builder=builder, next_size=next_size,
-                                     batched=batched, max_chunks=max_chunks)
+                                     batched=batched, max_chunks=max_chunks,
+                                     step=step)
+
+    def bind_graph_step(self, name: str, step: Any, *,
+                        max_chunks: Optional[Callable] = None) -> None:
+        """Attach/merge the *campaign* (``lax.scan``) form without
+        clobbering an existing plan form — WF2 keeps its ``next_size``
+        planner while also gaining a campaign step.  ``max_chunks``
+        replaces the padding bound when given (the adaptive band needs a
+        sound ``ceil(n / chunk_param)``-style bound, not the geometric
+        estimate)."""
+        entry = self[name]
+        prev = entry.graph or GraphForm()
+        entry.graph = dataclasses.replace(
+            prev, step=step,
+            max_chunks=max_chunks if max_chunks is not None else prev.max_chunks)
+
+    def bind_techdef(self, name: str, tdef: TechniqueDef) -> None:
+        """Attach the form-generating :class:`TechniqueDef` for a
+        registered name (set by the deriving module so consumers — the
+        graph campaign engine, docs — can read the single definition)."""
+        if not isinstance(tdef, TechniqueDef):
+            raise TypeError(f"techdef for {name!r} must be a TechniqueDef, "
+                            f"got {type(tdef).__name__}")
+        self[name].techdef = tdef
 
     def bind_step_batch(self, name: str, factory: Callable) -> None:
         """Attach/replace the vectorized lane-parallel (``step_batch``)
@@ -233,9 +346,16 @@ class TechniqueRegistry(Mapping):
                    = None) -> "NamesView":
         return NamesView(self, predicate)
 
-    def graph_names(self) -> tuple[str, ...]:
-        """Techniques plannable in-graph (jax_sched's dispatch table)."""
-        return tuple(n for n, e in self._entries.items() if e.graph is not None)
+    def graph_names(self, *, plannable: bool = False) -> tuple[str, ...]:
+        """Techniques with an in-graph form.  ``plannable=True`` keeps
+        only those ``jax_sched.plan_chunks`` can schedule up front
+        (``builder`` or ``next_size``), excluding campaign step-only
+        forms (the adaptive band run by ``graph_sim``)."""
+        return tuple(
+            n for n, e in self._entries.items()
+            if e.graph is not None
+            and (not plannable or e.graph.builder is not None
+                 or e.graph.next_size is not None))
 
     def step_batch_names(self) -> tuple[str, ...]:
         """Techniques with a vectorized lane-parallel form (the batch
@@ -319,7 +439,9 @@ REGISTRY = TechniqueRegistry()
 #: (``from repro.core.schedule import register_technique``).
 register_technique = REGISTRY.register
 bind_graph_form = REGISTRY.bind_graph_form
+bind_graph_step = REGISTRY.bind_graph_step
 bind_step_batch = REGISTRY.bind_step_batch
+bind_techdef = REGISTRY.bind_techdef
 
 
 _BACKENDS = ("auto", "host", "graph")
@@ -481,12 +603,24 @@ _DOC_MARKER = ("<!-- AUTO-GENERATED by `python -m repro.core.schedule --doc "
 
 def _planning_form(entry: TechniqueEntry) -> str:
     g = entry.graph
-    if g is None:
+    if g is None or (g.builder is None and g.next_size is None):
+        # step-only graph forms (the adaptive campaign band) are not
+        # plannable: the chunk sequence depends on measured telemetry
         return "host band"
     if g.builder is not None:
         return "in-graph (array builder)"
     return ("in-graph (while-loop, batched)" if g.batched
             else "in-graph (while-loop)")
+
+
+def _graph_band(entry: TechniqueEntry) -> str:
+    # the band `graph_sim.simulate_batch_graph` runs this technique on
+    g = entry.graph
+    if g is not None and g.step is not None:
+        return "lax.scan campaign"
+    if g is not None and (g.builder is not None or g.next_size is not None):
+        return "planned (closed form)"
+    return "host fallback"
 
 
 def _chunk_param_semantics(entry: TechniqueEntry) -> str:
@@ -515,7 +649,11 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
     """
     entries = [registry[n] for n in registry]
     paper = [e.name for e in entries if e.paper_set]
-    graph = [e.name for e in entries if e.graph is not None]
+    graph = [e.name for e in entries if e.graph is not None
+             and (e.graph.builder is not None
+                  or e.graph.next_size is not None)]
+    scan = [e.name for e in entries if e.graph is not None
+            and e.graph.step is not None]
     adaptive = [e.name for e in entries if e.meta.adaptive]
     stepb = [e.name for e in entries if e.step_batch is not None]
     steal = [e.name for e in entries if e.meta.stealing]
@@ -528,16 +666,18 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         f"({len(paper)} in the paper's LB4OMP set, {len(adaptive)} "
         f"adaptive, {len(steal)} in the work-stealing band, "
         f"{len(graph)} with an in-graph closed form, "
-        f"{len(stepb)} with a vectorized `step_batch` form).  Rows are "
-        "in registration order — the portfolio order the paper tables "
-        "use.  Aliases: "
+        f"{len(stepb)} with a vectorized `step_batch` form, "
+        f"{len(scan)} with an in-graph campaign (`lax.scan`) form).  "
+        "Rows are in registration order — the portfolio order the paper "
+        "tables use.  Aliases: "
         + ", ".join(f"`{a}` -> `{t}`" for a, t in sorted(_ALIASES.items()))
         + ".",
         "",
         "| technique | host class | band | planning form | batch engine | "
+        "graph band | "
         "`chunk_param` | adaptive | profiling | sync | o_cs | worker-dep "
         "| paper set |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.meta
@@ -546,6 +686,7 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
             f"{'steal' if m.stealing else 'self-sched'} | "
             f"{_planning_form(e)} | "
             f"{_batch_band(e)} | "
+            f"{_graph_band(e)} | "
             f"{_chunk_param_semantics(e)} | "
             f"{'yes' if m.adaptive else 'no'} | "
             f"{'yes' if m.requires_profiling else 'no'} | "
@@ -579,6 +720,14 @@ def generate_techniques_doc(registry: "TechniqueRegistry") -> str:
         "via `bind_step_batch` — all lanes advance one chunk round per "
         "NumPy step), or *event oracle* (one heapq event at a time).  "
         "All three agree with the discrete-event oracle bit-for-bit.",
+        "- **graph band** — the band the jitted campaign engine "
+        "(`repro.core.graph_sim.simulate_batch_graph`) runs the technique "
+        "on: *lax.scan campaign* (adaptive/worker-dependent calculus "
+        "generated from the technique's `TechniqueDef` — dense `(L, p)` "
+        "state as jax arrays, `lax.scan` over chunk rounds, `vmap` over "
+        "lanes), *planned (closed form)* (non-adaptive sequence "
+        "materialized via `jax_sched.plan_chunks`), or *host fallback* "
+        "(delegated to `simulate_batch`'s host bands).",
         "- **`chunk_param`** — OpenMP chunk parameter: the exact chunk "
         "size for `static`/`ss`, a lower-bound threshold for every other "
         "technique (paper Sec. 3).",

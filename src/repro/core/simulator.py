@@ -85,10 +85,17 @@ class SimResult:
     """One loop-instance outcome.  ``technique`` is the live host state
     machine that produced it — ``None`` for results materialized by the
     vectorized batch engine (`core/batch_sim.py`), which plans chunks
-    without driving a host instance."""
+    without driving a host instance.
+
+    ``engine_used`` names the engine that materialized the record —
+    ``"event"`` (the per-chunk oracle here), ``"plan"`` / ``"lockstep"``
+    (the batch engine's precomputed and adaptive bands), or ``"graph"``
+    (the jitted campaign engine in `core/graph_sim.py`) — so campaign
+    callers can detect a silent fallback to a slower engine."""
 
     record: LoopInstanceRecord
     technique: Optional[Technique] = None
+    engine_used: Optional[str] = None
 
     @property
     def t_par(self) -> float:
@@ -341,7 +348,8 @@ def simulate(
         )
         if recorder is not None:
             recorder.add(rec)
-        results.append(SimResult(record=rec, technique=tech))
+        results.append(SimResult(record=rec, technique=tech,
+                                 engine_used="event"))
     return results
 
 

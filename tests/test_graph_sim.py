@@ -1,0 +1,304 @@
+"""Cross-form agreement: the jitted in-graph campaign engine
+(core.graph_sim) must reproduce the scalar event oracle and the host
+batch engine across the adaptive/worker-dependent band derived from the
+single-definition TechniqueDefs.
+
+Equivalence bar (ISSUE 7 / the TechniqueDef bit-exactness contract in
+core/techniques.py):
+
+- scalar == batch stays bit-exact (asserted in tests/test_batch_sim.py);
+- graph == scalar is asserted *bit-exact* under jax x64 for p < 8, where
+  NumPy's worker-axis reductions are sequential and match XLA's row
+  reduce exactly;
+- for p >= 8 (NumPy switches to pairwise 8-accumulator summation, whose
+  tree XLA does not guarantee to match) and for BOLD (``jnp.log`` vs
+  ``math.log`` may differ by 1 ulp, which a chunk-size ``ceil`` can
+  amplify into a different grant), the agreement is a documented
+  tolerance instead — asserted tight (rtol 1e-9) but not bitwise.
+
+Identical ``(n_chunks, thread_finish)`` pins the whole chunk sequence:
+the engines grant deterministically off the (ready-clock, tiebreak)
+heap, so any diverging grant changes some worker's finish time.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property test degrades, agreement tests still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    BatchConfig,
+    LoopRecorder,
+    NOISY_PROFILE,
+    batch_grid,
+    simulate,
+    simulate_batch,
+    simulate_batch_graph,
+    nab_like,
+    sphynx_like,
+)
+from repro.core.graph_sim import CampaignStep, bind_campaign_form
+from repro.core.jax_sched import max_chunks_bound, plan_chunks
+from repro.core.schedule import REGISTRY
+
+W = sphynx_like(n=2000, seed=1)
+W2 = nab_like(n=1100, seed=2)
+SPEEDS4 = (1.0, 1.3, 0.9, 1.6)
+
+GRAPH_BAND = sorted(
+    n for n in REGISTRY
+    if REGISTRY[n].graph is not None
+    and isinstance(REGISTRY[n].graph.step, CampaignStep))
+EXACT_BAND = sorted(set(GRAPH_BAND) - {"bold"})
+STEAL_BAND = sorted(n for n in REGISTRY if REGISTRY[n].meta.stealing)
+
+
+def _assert_same(graph_res, ref_res, exact=True, rtol=1e-9):
+    assert len(graph_res) == len(ref_res)
+    for g, r in zip(graph_res, ref_res):
+        rg, rr = g.record, r.record
+        assert rg.n_chunks == rr.n_chunks
+        if exact:
+            assert rg.t_par == rr.t_par
+            np.testing.assert_array_equal(rg.thread_finish,
+                                          rr.thread_finish)
+        else:
+            np.testing.assert_allclose(rg.t_par, rr.t_par, rtol=rtol)
+            np.testing.assert_allclose(rg.thread_finish, rr.thread_finish,
+                                       rtol=rtol)
+        np.testing.assert_allclose(rg.thread_times, rr.thread_times,
+                                   rtol=max(rtol, 1e-12))
+        assert rg.technique == rr.technique
+        assert rg.instance == rr.instance
+
+
+def test_graph_band_is_the_adaptive_family():
+    """Every TechniqueDef-generated technique gained a campaign form."""
+    assert GRAPH_BAND == sorted(
+        n for n in REGISTRY if REGISTRY[n].techdef is not None)
+    assert set(GRAPH_BAND) == {
+        "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af", "maf", "bold",
+        "wf2"}
+
+
+@pytest.mark.parametrize("name", EXACT_BAND)
+def test_graph_matches_oracle_bitexact_small_p(name):
+    """p=4 < 8: graph == scalar oracle bit-for-bit under a loaded
+    scenario (overheads, NUMA, heterogeneous speeds, cold cost,
+    multi-timestep state carry, chunk_param threshold)."""
+    for cp, w in ((1, W), (7, W2)):
+        cfg = BatchConfig(technique=name, workload=w, p=4, chunk_param=cp,
+                          timesteps=3, speeds=SPEEDS4, numa_penalty=0.4,
+                          chunk_cold_cost=1e-7, seed=3)
+        graph = simulate_batch_graph([cfg], profile=NOISY_PROFILE)[0]
+        assert all(g.engine_used == "graph" for g in graph)
+        ref = simulate(name, w, 4, cp, timesteps=3, speeds=SPEEDS4,
+                       numa_penalty=0.4, chunk_cold_cost=1e-7, seed=3,
+                       profile=NOISY_PROFILE)
+        _assert_same(graph, ref, exact=True)
+
+
+def test_bold_documented_tolerance():
+    """BOLD's slack term takes a log: ``jnp.log`` (XLA) and ``math.log``
+    (C libm) are each correctly rounded to within 1 ulp but need not
+    agree, and a flipped ``ceil`` changes a grant — so BOLD's graph form
+    carries a tolerance, not bit-equality.  (The scalar/batch pair stays
+    bit-exact via the TechniqueDef ``lanewise`` flag; no such escape
+    hatch exists inside a traced program.)"""
+    for p, speeds in ((4, SPEEDS4), (16, None)):
+        cfg = BatchConfig(technique="bold", workload=W, p=p, timesteps=2,
+                          speeds=speeds, seed=3)
+        graph = simulate_batch_graph([cfg], profile=NOISY_PROFILE)[0]
+        ref = simulate("bold", W, p, timesteps=2, speeds=speeds, seed=3,
+                       profile=NOISY_PROFILE)
+        _assert_same(graph, ref, exact=False)
+
+
+@pytest.mark.parametrize("name", EXACT_BAND)
+def test_graph_large_p_documented_tolerance(name):
+    """p=16 >= 8: NumPy's pairwise summation blocks need not match
+    XLA's reduction tree, so worker-axis sums (AWF's 1/wap normalizer,
+    AF's D and T aggregates) may differ in the last ulp.  Empirically
+    they agree bit-for-bit on CPU today; the *contract* is the
+    tolerance asserted here."""
+    cfg = BatchConfig(technique=name, workload=W2, p=16, timesteps=2,
+                      seed=5)
+    graph = simulate_batch_graph([cfg], profile=NOISY_PROFILE)[0]
+    ref = simulate(name, W2, 16, timesteps=2, seed=5,
+                   profile=NOISY_PROFILE)
+    _assert_same(graph, ref, exact=False)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        name=st.sampled_from(EXACT_BAND),
+        n=st.integers(min_value=40, max_value=1500),
+        p=st.integers(min_value=2, max_value=7),
+        cp=st.sampled_from([1, 3, 10]),
+        seed=st.integers(min_value=0, max_value=5),
+        timesteps=st.integers(min_value=1, max_value=2),
+    )
+    def test_property_scalar_batch_graph_agree(name, n, p, cp, seed,
+                                               timesteps):
+        """scalar == batch == graph across the adaptive registry,
+        random n/p/chunk_param/seed, sigma > 0 workloads (sphynx-like
+        iterate costs are heavy-tailed), p < 8 for bit-exactness."""
+        w = sphynx_like(n=n, seed=seed)
+        assert float(np.std(w.costs)) > 0  # sigma > 0: adaptivity engages
+        cfg = BatchConfig(technique=name, workload=w, p=p, chunk_param=cp,
+                          timesteps=timesteps, seed=seed)
+        ref = simulate(name, w, p, cp, timesteps=timesteps, seed=seed)
+        batch = simulate_batch([cfg])[0]
+        graph = simulate_batch_graph([cfg])[0]
+        _assert_same(batch, ref, exact=True)
+        _assert_same(graph, ref, exact=True)
+        assert all(b.engine_used == "lockstep" for b in batch)
+        assert all(g.engine_used == "graph" for g in graph)
+
+
+@pytest.mark.parametrize("name", STEAL_BAND)
+def test_steal_band_excluded_with_rationale(name):
+    """Work-stealing techniques are *not* graph-band eligible, by
+    design: their state machines pop chunk *positions* from per-worker
+    host deques with victim-probe randomness (`core/stealing.py`), so
+    grants are neither contiguous in request order nor expressible as a
+    pure recurrence over dense (L, p) state — the TechniqueDef façade
+    cannot represent them.  They stay on the host lockstep band."""
+    entry = REGISTRY[name]
+    assert entry.meta.stealing
+    assert entry.techdef is None, (
+        f"{name} grew a TechniqueDef: revisit the steal-band exclusion")
+    assert entry.graph is None or not isinstance(entry.graph.step,
+                                                 CampaignStep)
+    cfg = BatchConfig(technique=name, workload=W2, p=4, seed=1)
+    res = simulate_batch_graph([cfg])[0]
+    assert all(r.engine_used != "graph" for r in res)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: max_chunks_bound covers every generated form
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", GRAPH_BAND)
+def test_max_chunks_bound_never_exceeded_by_any_form(name):
+    """The registry-driven padding bound (fed by TechniqueDef.max_chunks
+    through the campaign GraphForm) is sound for the scalar, batch, and
+    graph forms alike — no instance ever issues more grants."""
+    for n, p, cp in ((200, 4, 1), (1000, 6, 9), (500, 16, 25)):
+        w = sphynx_like(n=n, seed=7)
+        bound = max_chunks_bound(name, n, p, cp)
+        cfg = BatchConfig(technique=name, workload=w, p=p, chunk_param=cp,
+                          timesteps=2, seed=7)
+        ref = simulate(name, w, p, cp, timesteps=2, seed=7)
+        batch = simulate_batch([cfg])[0]
+        graph = simulate_batch_graph([cfg])[0]
+        for res in (ref, batch, graph):
+            for r in res:
+                assert r.record.n_chunks <= bound, (
+                    f"{name}: {r.record.n_chunks} grants > bound {bound} "
+                    f"(n={n} p={p} cp={cp})")
+
+
+def test_plan_chunks_rejects_campaign_only_forms():
+    """Step-only graph forms are runnable but not plannable: the chunk
+    sequence depends on measured telemetry."""
+    with pytest.raises(KeyError, match="campaign"):
+        plan_chunks("awf", 100, 4)
+    # wf2 keeps its plan form next to the campaign step
+    sizes, starts, count = plan_chunks("wf2", 100, 4)
+    assert int(sizes[:int(count)].sum()) == 100
+    assert "awf" not in REGISTRY.graph_names(plannable=True)
+    assert "awf" in REGISTRY.graph_names()
+
+
+def test_bind_campaign_form_requires_techdef():
+    with pytest.raises(KeyError, match="TechniqueDef"):
+        bind_campaign_form("gss")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: engine_used tagging + strict fallback reporting
+# ---------------------------------------------------------------------------
+
+
+def _stateful_perturb(ts, worker, rng):
+    return 1.0 + 0.05 * rng.random()
+
+
+def test_engine_used_tags_every_band():
+    cfgs = [
+        BatchConfig(technique="gss", workload=W2, p=4),
+        BatchConfig(technique="awf", workload=W2, p=4),
+        BatchConfig(technique="af", workload=W2, p=4,
+                    perturb=_stateful_perturb),
+    ]
+    host = simulate_batch(cfgs)
+    graph = simulate_batch_graph(cfgs)
+    assert [r[0].engine_used for r in host] == ["plan", "lockstep",
+                                                "event"]
+    assert [r[0].engine_used for r in graph] == ["plan", "graph", "event"]
+    # the per-call oracle tags too
+    assert simulate("awf", W2, 4)[0].engine_used == "event"
+
+
+def test_engine_used_survives_dedup():
+    cfgs = [BatchConfig(technique="awf", workload=W2, p=4, seed=s)
+            for s in (0, 1)]  # awf never reads the seed -> dedup alias
+    graph = simulate_batch_graph(cfgs)
+    assert graph[1][0].engine_used == "graph"
+    assert graph[1][0].record.t_par == graph[0][0].record.t_par
+    assert graph[1][0].record is not graph[0][0].record
+
+
+def test_strict_knob_reports_silent_fallback():
+    oracle_cfg = BatchConfig(technique="af", workload=W2, p=4,
+                             perturb=_stateful_perturb)
+    ok_cfg = BatchConfig(technique="awf", workload=W2, p=4)
+
+    with pytest.warns(RuntimeWarning, match="stateful perturb"):
+        simulate_batch([oracle_cfg], strict="warn")
+    with pytest.raises(RuntimeError, match="event oracle"):
+        simulate_batch([oracle_cfg], strict=True)
+    with pytest.warns(RuntimeWarning, match="stateful perturb"):
+        simulate_batch_graph([oracle_cfg], strict="warn")
+    with pytest.raises(RuntimeError, match="graph band"):
+        simulate_batch_graph([oracle_cfg], strict=True)
+    with pytest.raises(RuntimeError, match="record_chunks"):
+        simulate_batch_graph([ok_cfg], record_chunks=True, strict=True)
+    with pytest.raises(ValueError, match="strict"):
+        simulate_batch([ok_cfg], strict="bogus")
+    with pytest.raises(ValueError, match="strict"):
+        simulate_batch_graph([ok_cfg], strict="bogus")
+
+    # strict never fires on intentional routing: plan band + graph band
+    res = simulate_batch_graph(
+        [ok_cfg, BatchConfig(technique="gss", workload=W2, p=4)],
+        strict=True)
+    assert [r[0].engine_used for r in res] == ["graph", "plan"]
+    res = simulate_batch([ok_cfg], strict=True)
+    assert res[0][0].engine_used == "lockstep"
+
+
+def test_record_chunks_falls_back_to_host_whole_call():
+    cfg = BatchConfig(technique="awf", workload=W2, p=4)
+    res = simulate_batch_graph([cfg], record_chunks=True)[0]
+    assert res[0].engine_used == "lockstep"
+    assert res[0].record.chunks is not None
+    assert sum(g.size for g in res[0].record.chunks) == W2.n
+
+
+def test_recorder_stream_matches_host_engine():
+    cfgs = batch_grid(["awf", "gss"], [W2], ps=(4,), timesteps=(2),
+                      seeds=(0,))
+    rec_g, rec_h = LoopRecorder(), LoopRecorder()
+    simulate_batch_graph(cfgs, recorder=rec_g)
+    simulate_batch(cfgs, recorder=rec_h)
+    assert [(r.loop, r.technique, r.instance) for r in rec_g.records] == \
+           [(r.loop, r.technique, r.instance) for r in rec_h.records]
