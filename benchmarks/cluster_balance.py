@@ -44,6 +44,7 @@ import time
 import numpy as np
 
 from repro.serve.cluster import cluster_grid, make_traffic, simulate_cluster_batch
+from repro.trials.statistics import ToleranceBand
 
 from .common import RESULTS
 
@@ -57,7 +58,7 @@ SPEEDUP_FLOOR = 1.2
 #: the indivisible-giant margin (lower edge), dynamic by an ordinary
 #: rebalancing margin (upper edge) — measured 0.95x (full) / 1.4x
 #: (--quick) at the committed parameters
-HEAVY_TAIL_BAND = (0.8, 3.0)
+HEAVY_TAIL_BAND = ToleranceBand(0.8, 3.0)
 UNIFORM_SLACK = 1.05
 
 

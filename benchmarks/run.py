@@ -18,7 +18,7 @@ import time
 
 from . import (adaptive_bench, batch_bench, cluster_balance,
                framework_bench, graph_campaign_bench, kernel_sched_bench,
-               paper_campaign, steal_bench)
+               paper_campaign, steal_bench, trial_bench)
 from .common import RESULTS, emit
 
 
@@ -92,6 +92,9 @@ def main() -> None:
         # work-stealing vs pure DLS (loop + cluster level); quick-sized,
         # named so emit() doesn't overwrite the committed steal_bench.json
         "steal_quick": steal_bench.rows,
+        # scenario trials (fault/elasticity + bootstrap CIs); quick-sized,
+        # named so emit() doesn't overwrite the committed trial_suite.json
+        "trial_quick": trial_bench.rows,
     }
     # roofline needs dry-run artifacts; include when present
     try:

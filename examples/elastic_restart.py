@@ -8,51 +8,16 @@ the shrink/grow (``Technique.inherit``) — the paper's self-scheduling
 argument applied at pod scale.
 
 ``elastic_handoff`` is the re-plan + inherit path on its own (no jax,
-no training loop) — it is what ``tests/test_elastic.py`` exercises.
+no training loop) — it now lives in the library proper
+(``repro.serve.elastic``, alongside the serving-path
+``resize_scheduler`` hook) and is re-exported here for the demo.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
 
 import numpy as np
 
-from repro.core import make_technique, plan_schedule, replan
-
-
-def elastic_handoff(n: int = 1000, old_p: int = 4, new_p: int = 3,
-                    technique: str = "awf_b", chunks_done: int = 10):
-    """Re-plan ``n`` iterations from ``old_p`` onto ``new_p`` workers.
-
-    Returns ``(new_plan, old_tech, new_tech)``: the re-balanced
-    :class:`~repro.core.planner.Plan` over the surviving workers, and the
-    adaptive technique pair after ``new_tech.inherit(old_tech)`` — the
-    learned per-worker weights/telemetry of the workers that survive the
-    resize carry over instead of restarting cold (new workers, on grow,
-    start from a neutral prior).
-    """
-    # the chunk-plan view: re-balance the remaining iterations
-    plan = plan_schedule("fac2", n=n, p=old_p)
-    done = sum(c.size for c in plan.chunks[:chunks_done])
-    # note: replan shifts chunk starts by `done` (they index the original
-    # iteration space), so conservation is checked on sizes, not validate()
-    new_plan = replan(plan, new_p=new_p, done_iterations=done)
-    assert sum(c.size for c in new_plan.chunks) == n - done
-
-    # the adaptive-state view: run the old technique for a few grants so
-    # it learns per-worker speeds, then hand its state to the resized one
-    old = make_technique(technique, n=n, p=old_p)
-    old.begin_instance(0)
-    speeds = 1.0 + 0.5 * np.arange(old_p)  # worker w takes 1 + w/2 ms/iter
-    for i in range(4 * old_p):
-        w = i % old_p
-        g = old.next_chunk(w)
-        if g is None:
-            break
-        old.complete_chunk(w, g, exec_time=g.size * speeds[w] * 1e-3,
-                           sched_time=1e-6)
-    new = make_technique(technique, n=n - done, p=new_p)
-    new.inherit(old)
-    new.begin_instance(1)
-    return new_plan, old, new
+from repro.serve.elastic import elastic_handoff  # noqa: F401
 
 
 def main():

@@ -2,13 +2,19 @@
 
 from .cluster import (  # noqa: F401
     ClusterConfig,
+    ClusterEvent,
     ClusterRecord,
     ClusterRouter,
+    ReplicaKill,
+    ReplicaRecover,
+    ReplicaSpeed,
+    ScaleTo,
     TwoLevelSpec,
     cluster_grid,
     make_traffic,
     simulate_cluster,
     simulate_cluster_batch,
 )
+from .elastic import elastic_handoff, resize_scheduler  # noqa: F401
 from .engine import DecodeEngine, EngineStats  # noqa: F401
 from .scheduler import Request, RequestScheduler, simulate_serving  # noqa: F401

@@ -39,18 +39,103 @@ import numpy as np
 
 from ..core.metrics import LoopInstanceRecord, LoopRecorder, cov, percent_imbalance
 from ..core.schedule import ScheduleSpec, resolve
+from .elastic import resize_scheduler
 from .scheduler import Request, RequestScheduler, simulate_serving
 
 __all__ = [
     "TwoLevelSpec",
     "ClusterRouter",
     "ClusterRecord",
+    "ClusterEvent",
+    "ReplicaKill",
+    "ReplicaRecover",
+    "ReplicaSpeed",
+    "ScaleTo",
     "simulate_cluster",
     "ClusterConfig",
     "cluster_grid",
     "simulate_cluster_batch",
     "make_traffic",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Fault / elasticity events (the scenario programs of repro.trials)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterEvent:
+    """Base of the mid-stream perturbations ``simulate_cluster`` injects.
+
+    Events fire at absolute simulation time ``time``; an event tied with
+    a replica pull at the same instant is applied first, so the pull
+    sees the post-event cluster.  Subclass, don't instantiate.
+    """
+
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaKill(ClusterEvent):
+    """Replica ``replica`` crashes at ``time``.
+
+    In-flight requests (completion timestamps after the kill) are lost
+    and resubmitted to the router — they will be served again by a
+    survivor, with latency measured from their *original* arrival.  The
+    node scheduler re-plans over the survivors via
+    ``ClusterRouter.set_active`` (``Technique.inherit`` carries AWF/AF/
+    BOLD state); the dead replica's intra-node state is discarded.
+    """
+
+    replica: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaRecover(ClusterEvent):
+    """A previously killed replica rejoins at ``time``.
+
+    It comes back with fresh worker clocks and a *fresh* intra-node
+    scheduler — intra-replica adaptive state does not survive a crash;
+    only the node level's (carried across the membership change by
+    ``Technique.inherit``) does.  ``speed`` optionally sets a new cost
+    multiplier for the reborn replica (e.g. a cold cache: slower).
+    """
+
+    replica: int
+    speed: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpeed(ClusterEvent):
+    """Thermal/degradation event: set replica ``replica``'s cost
+    multiplier to ``speed`` (>1 == slower) at ``time``.
+
+    Replica chunks are served atomically, so the new speed applies from
+    the replica's *next* node-level pull — a static node technique that
+    bound all its work up front never feels a later degradation, which
+    is exactly the blind spot the thermal trial scenarios probe.
+    """
+
+    replica: int
+    speed: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleTo(ClusterEvent):
+    """Elasticity event: resize the active set to replicas ``[0,
+    num_replicas)`` at ``time``.
+
+    Scale-up activates dormant replicas (never-started ids; ids downed
+    by an explicit :class:`ReplicaKill` stay dead until their
+    :class:`ReplicaRecover`) with fresh clocks and intra-node state.
+    Scale-down is preemptive: replicas outside the new set stop
+    immediately and their in-flight requests are requeued, like a kill.
+    Both re-plan the node level over the new membership with inherited
+    adaptive state.
+    """
+
+    num_replicas: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,7 +211,13 @@ class ClusterRouter:
             self.sched = RequestScheduler(num_workers=num_replicas,
                                           technique=spec)
             self.spec = self.sched.spec
-        # per-replica cumulative telemetry (the ClusterRecord inputs)
+        # the live membership: global replica id -> scheduler-local index.
+        # Fault/elasticity events shrink or grow it via set_active; the
+        # identity mapping is the no-events fast path.
+        self._active_ids = list(range(num_replicas))
+        self._local = {r: r for r in range(num_replicas)}
+        # per-replica cumulative telemetry (the ClusterRecord inputs);
+        # num_replicas is the *capacity* — scale events can grow it
         self.replica_busy = np.zeros(num_replicas)
         self.replica_requests = np.zeros(num_replicas, dtype=np.int64)
         self.node_chunks = 0
@@ -136,6 +227,43 @@ class ClusterRouter:
             self._pending.append(req)
         else:
             self.sched.submit(req)
+
+    def _ensure_capacity(self, n: int) -> None:
+        """Grow the telemetry arrays (and capacity) to ``n`` replicas."""
+        if n <= self.num_replicas:
+            return
+        grow = n - self.num_replicas
+        self.replica_busy = np.concatenate([self.replica_busy,
+                                            np.zeros(grow)])
+        self.replica_requests = np.concatenate(
+            [self.replica_requests, np.zeros(grow, dtype=np.int64)])
+        self.num_replicas = n
+
+    def set_active(self, ids: Sequence[int]) -> None:
+        """Change the live replica membership (fault/elasticity hook).
+
+        The backlog and node-level adaptive state move to a scheduler
+        resized over ``len(ids)`` workers (:func:`~repro.serve.elastic.
+        resize_scheduler`): the next pull re-plans with
+        ``Technique.inherit``, so AWF/AF/BOLD telemetry survives kills,
+        recoveries and scale events.  Pulls from replicas outside the
+        set return empty; their ``complete`` reports still accrue to the
+        telemetry arrays but no longer feed the node technique.  An
+        empty ``ids`` leaves the scheduler dormant — backlog and
+        adaptive state wait for the next non-empty membership.
+        """
+        if self._steal:
+            raise ValueError("steal-band routers do not support set_active "
+                             "(fault/elasticity events)")
+        ids = sorted({int(i) for i in ids})
+        if ids:
+            self._ensure_capacity(ids[-1] + 1)
+        if ids == self._active_ids:
+            return
+        self._active_ids = ids
+        if ids:
+            self.sched = resize_scheduler(self.sched, len(ids))
+        self._local = {g: i for i, g in enumerate(ids)}
 
     def _steal_pull(self, replica: int) -> list[Request]:
         tech = self._stech
@@ -157,8 +285,11 @@ class ClusterRouter:
         return self._snapshot[g.start:g.start + g.size]
 
     def pull(self, replica: int) -> list[Request]:
-        chunk = (self._steal_pull(replica) if self._steal
-                 else self.sched.pull(replica))
+        if self._steal:
+            chunk = self._steal_pull(replica)
+        else:
+            loc = self._local.get(replica)
+            chunk = [] if loc is None else self.sched.pull(loc)
         if chunk:
             self.node_chunks += 1
             self.replica_requests[replica] += len(chunk)
@@ -167,7 +298,9 @@ class ClusterRouter:
     def complete(self, replica: int, busy: float) -> None:
         self.replica_busy[replica] += float(busy)
         if not self._steal:
-            self.sched.complete(replica, elapsed=float(busy))
+            loc = self._local.get(replica)
+            if loc is not None:
+                self.sched.complete(loc, elapsed=float(busy))
 
     @property
     def backlog(self) -> int:
@@ -206,6 +339,19 @@ class ClusterRecord:
     replica_finish: np.ndarray
     replica_requests: np.ndarray
     node_chunks: int
+    # per-request completion timestamps, sorted by (finish, rid): the
+    # raw material for latency-percentile statistics (repro.trials).
+    # Arrivals are the requests' original submission times — a request
+    # requeued by a replica kill keeps its first arrival, so its latency
+    # includes the lost work.
+    request_arrival: Optional[np.ndarray] = None
+    request_finish: Optional[np.ndarray] = None
+
+    @property
+    def request_latency(self) -> Optional[np.ndarray]:
+        if self.request_finish is None or self.request_arrival is None:
+            return None
+        return self.request_finish - self.request_arrival
 
     @property
     def cov(self) -> float:
@@ -234,6 +380,7 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
                      router: Optional[ClusterRouter] = None,
                      recorder: Optional[LoopRecorder] = None,
                      loop: str = "cluster",
+                     events: Sequence[ClusterEvent] = (),
                      return_completions: bool = False) -> dict:
     """Event-driven two-level serving simulation.
 
@@ -265,15 +412,42 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
     ``router`` to continue a previous call's node-level state (wave-by-
     wave serving: AWF node weights learned on one wave carry to the
     next); telemetry in the result is always this call's delta.
+
+    ``events`` injects mid-stream perturbations — :class:`ReplicaKill`,
+    :class:`ReplicaRecover`, :class:`ReplicaSpeed`, :class:`ScaleTo` —
+    through the same event heap that orders replica pulls, so a fault at
+    time *t* is applied between the pull before and the pull after *t*.
+    A kill rewinds the victim's post-*t* completions (the requests it
+    had in flight) back into the router's backlog; every submitted
+    request is still served exactly once, with latency measured from its
+    original arrival.  Membership changes re-plan the node level over
+    the survivors via :meth:`ClusterRouter.set_active` (adaptive state
+    carried by ``Technique.inherit``).  ``ScaleTo`` events may grow the
+    cluster past ``num_replicas``; the ``replica_*`` result arrays then
+    cover the grown capacity.  Steal-band node schedules do not support
+    events.
     """
     import heapq
 
     spec = TwoLevelSpec.parse(schedule)
-    speed = (np.ones(num_replicas) if replica_speed is None
-             else np.asarray(replica_speed, dtype=np.float64))
-    if speed.shape != (num_replicas,):
+    evs = list(events)
+    # capacity: the largest replica id any event can touch
+    cap = num_replicas
+    for ev in evs:
+        if isinstance(ev, ScaleTo):
+            cap = max(cap, int(ev.num_replicas))
+        elif isinstance(ev, (ReplicaKill, ReplicaRecover, ReplicaSpeed)):
+            cap = max(cap, int(ev.replica) + 1)
+        else:
+            raise TypeError(f"unknown cluster event {ev!r}")
+    speed_in = (np.ones(num_replicas) if replica_speed is None
+                else np.asarray(replica_speed, dtype=np.float64))
+    if speed_in.shape != (num_replicas,):
         raise ValueError(
-            f"replica_speed must have shape ({num_replicas},), got {speed.shape}")
+            f"replica_speed must have shape ({num_replicas},), "
+            f"got {speed_in.shape}")
+    speed = np.ones(cap)
+    speed[:num_replicas] = speed_in
     if router is None:
         router = ClusterRouter(num_replicas, schedule=spec.node)
     elif router.num_replicas != num_replicas:
@@ -284,6 +458,10 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
         # schedule would mislabel every record and stat downstream
         raise ValueError(f"router schedules {router.spec}, but the "
                          f"requested node schedule is {spec.node}")
+    if evs and router._steal:
+        raise ValueError("fault/elasticity events are not supported with "
+                         "steal-band node schedules")
+    router._ensure_capacity(cap)
     for r in sorted(requests, key=lambda r: r.arrival):
         router.submit(r)
     # snapshot router telemetry so a reused router (wave-by-wave serving
@@ -292,38 +470,148 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
     requests0 = router.replica_requests.copy()
     chunks0 = router.node_chunks
     migrated0 = getattr(router, "migrated_requests", 0)
-    clocks = [np.zeros(workers_per_replica) for _ in range(num_replicas)]
+    clocks = [np.zeros(workers_per_replica) for _ in range(cap)]
     intra = [RequestScheduler(num_workers=workers_per_replica,
                               technique=spec.thread)
-             for _ in range(num_replicas)]
-    pending_busy = [0.0] * num_replicas  # last chunk's busy, not yet reported
-    done: list[tuple[int, float]] = []
+             for _ in range(cap)]
+    pending_busy = [0.0] * cap  # last chunk's busy, not yet reported
+    # (request, finish, replica, service): replica + service support the
+    # kill-event rewind; completions/latency read request.rid + finish
+    done: list[tuple[Request, float, int, float]] = []
     arrivals = {r.rid: r.arrival for r in requests}
-    heap = [(0.0, rep) for rep in range(num_replicas)]
+    alive = [rep < num_replicas for rep in range(cap)]
+    killed = [False] * cap      # explicitly killed: ScaleTo won't revive
+    epoch = [0] * cap           # bumped on kill: invalidates queued pulls
+    queued = [False] * cap      # has a live pull entry in the heap
+    # heap entries: (time, priority, key, epoch).  Priority 0 = event
+    # (key = index into evs), 1 = replica pull (key = replica id) — an
+    # event at time t is applied before any pull at t, and equal-time
+    # pulls keep ordering by replica id.
+    heap: list[tuple[float, int, int, int]] = [
+        (float(ev.time), 0, idx, -1) for idx, ev in enumerate(evs)]
+    for rep in range(num_replicas):
+        heap.append((0.0, 1, rep, 0))
+        queued[rep] = True
     heapq.heapify(heap)
+
+    def wake(rep: int, t: float) -> None:
+        # (re)schedule a pull for a live replica with no queued entry —
+        # retirees re-enter service when an event adds backlog/capacity
+        if alive[rep] and not queued[rep]:
+            queued[rep] = True
+            heapq.heappush(heap, (max(float(t), float(clocks[rep].min())),
+                                  1, rep, epoch[rep]))
+
+    def activate(rep: int, t: float) -> None:
+        alive[rep] = True
+        killed[rep] = False
+        clocks[rep] = np.full(workers_per_replica, float(t))
+        # intra-node adaptive state does not survive a crash/cold start;
+        # only node-level state does (via set_active -> inherit)
+        intra[rep] = RequestScheduler(num_workers=workers_per_replica,
+                                      technique=spec.thread)
+
+    def deactivate(rep: int, t: float) -> None:
+        # rewind this replica's post-t completions: those requests were
+        # in flight when it died, and must be served again elsewhere
+        lost = [e for e in done if e[2] == rep and e[1] > t]
+        if lost:
+            done[:] = [e for e in done if not (e[2] == rep and e[1] > t)]
+            # retract the lost requests' service time from telemetry —
+            # first from the unreported chunk, remainder from the
+            # already-accrued busy (never below this call's baseline)
+            extra = sum(e[3] for e in lost)
+            take = min(pending_busy[rep], extra)
+            pending_busy[rep] -= take
+            rem = extra - take
+            if rem > 0:
+                router.replica_busy[rep] = max(
+                    float(busy0[rep]), float(router.replica_busy[rep]) - rem)
+            router.replica_requests[rep] -= len(lost)
+            for req, _, _, _ in lost:
+                # requeued copies cannot be served before the kill: clamp
+                # the copy's arrival to t (latency still uses the
+                # original arrival via the `arrivals` map)
+                router.submit(dataclasses.replace(
+                    req, arrival=max(req.arrival, float(t))))
+        if pending_busy[rep]:
+            # the surviving part of the last chunk's measurement still
+            # feeds the node technique before the membership re-plan
+            router.complete(rep, busy=pending_busy[rep])
+            pending_busy[rep] = 0.0
+        clocks[rep] = np.minimum(clocks[rep], float(t))
+        alive[rep] = False
+        queued[rep] = False
+        epoch[rep] += 1
+
     while heap:
-        _, rep = heapq.heappop(heap)
+        t, prio, key, stamp = heapq.heappop(heap)
+        if prio == 0:
+            ev = evs[key]
+            if isinstance(ev, ReplicaSpeed):
+                # chunk-atomic: applies from the replica's next pull
+                speed[ev.replica] = float(ev.speed)
+            elif isinstance(ev, ReplicaKill):
+                if alive[ev.replica]:
+                    deactivate(ev.replica, t)
+                    killed[ev.replica] = True
+                    router.set_active(
+                        [r for r in range(cap) if alive[r]])
+                    for r2 in range(cap):  # requeued work re-wakes retirees
+                        wake(r2, t)
+            elif isinstance(ev, ReplicaRecover):
+                if ev.speed is not None:
+                    speed[ev.replica] = float(ev.speed)
+                if not alive[ev.replica]:
+                    activate(ev.replica, t)
+                    router.set_active(
+                        [r for r in range(cap) if alive[r]])
+                    wake(ev.replica, t)
+            elif isinstance(ev, ScaleTo):
+                m = int(ev.num_replicas)
+                changed = False
+                for r in range(cap):
+                    if r >= m and alive[r]:
+                        deactivate(r, t)  # preemptive: in-flight requeued
+                        changed = True
+                    elif r < m and not alive[r] and not killed[r]:
+                        activate(r, t)
+                        changed = True
+                if changed:
+                    router.set_active(
+                        [r for r in range(cap) if alive[r]])
+                    for r2 in range(cap):
+                        wake(r2, t)
+            continue
+        rep = key
+        if stamp != epoch[rep] or not alive[rep]:
+            continue  # stale pull queued before a kill
+        queued[rep] = False
         if pending_busy[rep]:
             router.complete(rep, busy=pending_busy[rep])
             pending_busy[rep] = 0.0
         chunk = router.pull(rep)
         if not chunk:
-            continue  # backlog empty: the replica retires
+            continue  # backlog empty: the replica retires (events re-wake)
         stats = simulate_serving(
             chunk, num_workers=workers_per_replica, scheduler=intra[rep],
             worker_speed=np.full(workers_per_replica, speed[rep]),
             worker_free_at=clocks[rep], return_completions=True)
         clocks[rep] = np.asarray(stats["worker_finish"])
         pending_busy[rep] = float(np.sum(stats["worker_busy"]))
-        done.extend(stats["completions"])
+        by_rid = {r.rid: r for r in chunk}
+        for rid, fin in stats["completions"]:
+            req = by_rid[rid]
+            done.append((req, fin, rep, req.cost * float(speed[rep])))
         # the replica requests its next node chunk when its first slot
         # goes hungry (min finish), not when the backlog merely drained:
         # one slow slot must not stall the refill for the idle ones
-        heapq.heappush(heap, (float(clocks[rep].min()), rep))
+        queued[rep] = True
+        heapq.heappush(heap, (float(clocks[rep].min()), 1, rep, epoch[rep]))
 
     # flush the final chunks' measurements (no further pull will report
     # them) so node-level adaptive state is complete for a reused router
-    for rep in range(num_replicas):
+    for rep in range(cap):
         if pending_busy[rep]:
             router.complete(rep, busy=pending_busy[rep])
 
@@ -332,14 +620,27 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
     # Table-1 metrics read as usual — a replica at busy == makespan was
     # never idle
     slot_busy = (router.replica_busy - busy0) / workers_per_replica
+    if done:
+        lat = np.array([fin - arrivals[req.rid] for req, fin, _, _ in done])
+        # sorted by (finish, rid): a canonical per-request timeline for
+        # the trial statistics layer
+        order = sorted(range(len(done)),
+                       key=lambda i: (done[i][1], done[i][0].rid))
+        req_arrival = np.array([arrivals[done[i][0].rid] for i in order])
+        req_finish = np.array([done[i][1] for i in order])
+    else:
+        lat = None
+        req_arrival = req_finish = None
     record = ClusterRecord(
-        schedule=spec, num_replicas=num_replicas,
+        schedule=spec, num_replicas=cap,
         workers_per_replica=workers_per_replica, n=len(done),
         makespan=float(free_at.max()),
         replica_busy=slot_busy,
         replica_finish=free_at,
         replica_requests=router.replica_requests - requests0,
-        node_chunks=router.node_chunks - chunks0)
+        node_chunks=router.node_chunks - chunks0,
+        request_arrival=req_arrival,
+        request_finish=req_finish)
     if recorder is not None:
         recorder.add(record.to_record(loop, recorder.next_instance(loop)))
 
@@ -361,15 +662,17 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
         migrated_requests=(
             router.migrated_requests - migrated0 if router._steal else None),
     )
-    if not done:
-        out.update(mean_latency=0.0, p50=0.0, p99=0.0)
+    if lat is None:
+        out.update(mean_latency=0.0, p50=0.0, p99=0.0, p999=0.0)
     else:
-        lat = np.array([t - arrivals[rid] for rid, t in done])
         out.update(mean_latency=float(lat.mean()),
                    p50=float(np.percentile(lat, 50)),
-                   p99=float(np.percentile(lat, 99)))
+                   p99=float(np.percentile(lat, 99)),
+                   p999=float(np.percentile(lat, 99.9)))
     if return_completions:
-        out["completions"] = done
+        out["completions"] = [(req.rid, fin) for req, fin, _, _ in done]
+        out["latencies"] = ([] if req_finish is None
+                            else (req_finish - req_arrival).tolist())
     return out
 
 
@@ -455,6 +758,13 @@ def make_traffic(kind: str, n: int = 800, seed: int = 0) -> list[Request]:
       bursty      spiky sizes arriving in bursts (skew + waves; eager
                   node chunks bind not-yet-arrived requests, so small
                   node chunks win)
+      diurnal     arrivals follow one sinusoidal "day" (rate ∝
+                  1 − A·cos(2πt/T) over [0, T], inverse-CDF sampled):
+                  a quiet trough, a loaded peak — the daily ramp a
+                  static partition provisions wrong at both ends
+      flash_crowd background trickle with ~35% of all requests landing
+                  inside a 0.02-wide spike at a seeded moment (the
+                  "everyone hits reload" regime)
     """
     rng = np.random.default_rng(seed)
     if kind == "uniform":
@@ -486,5 +796,27 @@ def make_traffic(kind: str, n: int = 800, seed: int = 0) -> list[Request]:
         return [Request(rid=i, arrival=float(burst_t[which[i]]),
                         prompt_len=int(rng.integers(64, 1024)),
                         max_new_tokens=int(new[i])) for i in range(n)]
+    if kind == "diurnal":
+        T, A = 0.6, 0.9
+        grid = np.linspace(0.0, T, 2049)
+        cdf = (grid - (A * T / (2 * np.pi)) * np.sin(2 * np.pi * grid / T)) / T
+        arr = np.sort(np.interp(rng.random(n), cdf, grid))
+        new = rng.integers(16, 256, size=n)
+        return [Request(rid=i, arrival=float(arr[i]),
+                        prompt_len=int(rng.integers(64, 1024)),
+                        max_new_tokens=int(new[i])) for i in range(n)]
+    if kind == "flash_crowd":
+        T = 0.6
+        k = max(1, int(round(0.35 * n)))
+        t0 = float(rng.uniform(0.1, T - 0.1))
+        arr = rng.uniform(0.0, T, size=n)
+        crowd = rng.choice(n, size=k, replace=False)
+        arr[crowd] = t0 + rng.uniform(0.0, 0.02, size=k)
+        arr = np.sort(arr)
+        new = rng.integers(16, 256, size=n)
+        return [Request(rid=i, arrival=float(arr[i]),
+                        prompt_len=int(rng.integers(64, 1024)),
+                        max_new_tokens=int(new[i])) for i in range(n)]
     raise ValueError(f"unknown traffic kind {kind!r}; known: "
-                     "uniform, heavy_tail, spiky, zipf, bursty")
+                     "uniform, heavy_tail, spiky, zipf, bursty, "
+                     "diurnal, flash_crowd")

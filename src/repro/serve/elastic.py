@@ -1,0 +1,105 @@
+"""Elastic worker-set changes: re-plan + ``Technique.inherit`` as a
+library path.
+
+This is the promotion of ``examples/elastic_restart.py``'s
+``elastic_handoff`` demo into the serving layer proper: when a worker
+set grows or shrinks mid-stream (a replica is lost or added, a cluster
+scales up or down), the remaining work is re-planned over the *new*
+worker count and the adaptive techniques carry their learned per-worker
+telemetry across the resize instead of restarting cold — AWF slices
+survivor telemetry (grown workers get a neutral prior), AF reruns its
+warm-up only for added workers, BOLD transfers its global per-iteration
+statistics (see ``tests/test_elastic.py`` for the exact contracts).
+
+Two entry points:
+
+  * :func:`resize_scheduler` — the serving-path hook: rebuild a
+    :class:`~repro.serve.scheduler.RequestScheduler` over a new worker
+    count, moving the live backlog and marking the next admission plan
+    to ``inherit`` the old technique's state.  ``ClusterRouter`` uses it
+    for replica kill / recover / scale events
+    (``serve/cluster.py:ClusterRouter.set_active``).
+  * :func:`elastic_handoff` — the standalone re-plan + inherit path on
+    the chunk-plan level (no serving state), used by the elastic-restart
+    example and the trainer's shrink/grow story.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import make_technique, plan_schedule, replan
+from .scheduler import RequestScheduler
+
+__all__ = ["elastic_handoff", "resize_scheduler"]
+
+
+def resize_scheduler(sched: RequestScheduler,
+                     num_workers: int) -> RequestScheduler:
+    """Grow or shrink a live ``RequestScheduler`` to ``num_workers``.
+
+    Returns a *new* scheduler over the same backlog: the unserved
+    requests move wholesale (arrival order preserved), and the next
+    admission plan is built over the new worker count with
+    ``new_tech.inherit(old_tech)`` — the same forced re-plan-with-
+    inherited-state the scheduler already performs at every plan
+    boundary, only triggered by the worker-set change instead of plan
+    exhaustion.  With ``num_workers == sched.num_workers`` the handoff
+    is byte-identical: the inherited technique state is an exact copy
+    (the equal-p contract of ``Technique.inherit``).
+
+    Grants outstanding at resize time are dropped from telemetry — the
+    workers they were measured against may no longer exist, and a
+    measurement attributed to a renumbered worker would corrupt the
+    inherited weights.  Late ``complete()`` calls against the *old*
+    scheduler are harmless no-ops for the new one.
+    """
+    if num_workers <= 0:
+        raise ValueError(f"need num_workers > 0, got {num_workers}")
+    new = RequestScheduler(num_workers=num_workers, technique=sched.spec)
+    new._pending = sched._pending[sched._head:]
+    new._head = 0
+    new._plan_gen = sched._plan_gen
+    if sched._tech is not None:
+        # the next pull re-plans over the moved backlog and inherits the
+        # old technique's adaptive state across the p change
+        new._tech = sched._tech
+        new._force_replan = True
+    return new
+
+
+def elastic_handoff(n: int = 1000, old_p: int = 4, new_p: int = 3,
+                    technique: str = "awf_b", chunks_done: int = 10):
+    """Re-plan ``n`` iterations from ``old_p`` onto ``new_p`` workers.
+
+    Returns ``(new_plan, old_tech, new_tech)``: the re-balanced
+    :class:`~repro.core.planner.Plan` over the surviving workers, and the
+    adaptive technique pair after ``new_tech.inherit(old_tech)`` — the
+    learned per-worker weights/telemetry of the workers that survive the
+    resize carry over instead of restarting cold (new workers, on grow,
+    start from a neutral prior).
+    """
+    # the chunk-plan view: re-balance the remaining iterations
+    plan = plan_schedule("fac2", n=n, p=old_p)
+    done = sum(c.size for c in plan.chunks[:chunks_done])
+    # note: replan shifts chunk starts by `done` (they index the original
+    # iteration space), so conservation is checked on sizes, not validate()
+    new_plan = replan(plan, new_p=new_p, done_iterations=done)
+    assert sum(c.size for c in new_plan.chunks) == n - done
+
+    # the adaptive-state view: run the old technique for a few grants so
+    # it learns per-worker speeds, then hand its state to the resized one
+    old = make_technique(technique, n=n, p=old_p)
+    old.begin_instance(0)
+    speeds = 1.0 + 0.5 * np.arange(old_p)  # worker w takes 1 + w/2 ms/iter
+    for i in range(4 * old_p):
+        w = i % old_p
+        g = old.next_chunk(w)
+        if g is None:
+            break
+        old.complete_chunk(w, g, exec_time=g.size * speeds[w] * 1e-3,
+                           sched_time=1e-6)
+    new = make_technique(technique, n=n - done, p=new_p)
+    new.inherit(old)
+    new.begin_instance(1)
+    return new_plan, old, new

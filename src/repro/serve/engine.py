@@ -88,6 +88,7 @@ class DecodeEngine:
         # the live-lane mask is maintained incrementally so the hot loop
         # never rebuilds Python lists per decode step
         self._active_mask = np.zeros(slots, bool)
+        self._disabled = [False] * slots  # lanes out of service (faults)
         self._need_refill = True
         self.plan_calls = 0          # admissions that planned
         self.plan_time_s = 0.0       # host time spent planning
@@ -116,6 +117,41 @@ class DecodeEngine:
         req.prompt_tokens = prompt  # type: ignore[attr-defined]
         self.sched.submit(req)
 
+    def set_slot_enabled(self, s: int, enabled: bool) -> None:
+        """Fault-injection hook: take decode lane ``s`` out of (or back
+        into) service.
+
+        Disabling a lane mid-request requeues its active request and the
+        unstarted rest of its admission chunk back to the scheduler —
+        they are re-admitted (and re-prefilled from scratch) on another
+        lane, served exactly once overall.  The interrupted chunk's step
+        measurement is dropped instead of being reported: attributing a
+        partial chunk to a dead lane would corrupt the adaptive weights.
+        Re-enabling makes the lane eligible again at the next refill;
+        its recurrent state is reset on reuse as usual.
+        """
+        if enabled:
+            if self._disabled[s]:
+                self._disabled[s] = False
+                self._need_refill = True
+            return
+        if self._disabled[s]:
+            return
+        self._disabled[s] = True
+        req = self._active[s]
+        if req is not None:
+            self._outputs.pop(req.rid, None)  # restarts clean elsewhere
+            self.sched.submit(req)
+            self._active[s] = None
+            self._active_mask[s] = False
+        for q in self._queue[s]:
+            self.sched.submit(q)
+        self._queue[s] = []
+        self._chunk_open[s] = False
+        self._chunk_steps[s] = 0
+        self.sched._outstanding.pop(s, None)  # drop the open grant too
+        self._need_refill = True
+
     def run(self, max_steps: int = 10_000) -> EngineStats:
         stats = EngineStats()
         t0 = time.time()
@@ -123,6 +159,8 @@ class DecodeEngine:
         while self._active_mask.any() or self.sched.backlog:
             if stats.steps >= max_steps:
                 break
+            if not self._active_mask.any() and all(self._disabled):
+                break  # every lane out of service: the backlog must wait
             self._advance(stats)
             if self._need_refill:
                 # only when a slot retired: steady-state decode steps
@@ -175,6 +213,8 @@ class DecodeEngine:
     def _refill(self):
         admitted = False
         for s in range(self.slots):
+            if self._disabled[s]:
+                continue
             if self._active[s] is None:
                 if not self._queue[s]:
                     if self._chunk_open[s]:

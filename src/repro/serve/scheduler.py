@@ -66,6 +66,10 @@ class RequestScheduler:
         self._pending: list[Request] = []
         self._head = 0
         self._tech = None
+        # set by serve.elastic.resize_scheduler: the carried-over tech is
+        # sized for the *old* worker count, so the next pull must re-plan
+        # (and inherit) even though the old plan still has work remaining
+        self._force_replan = False
         self._plan_gen = 0  # admission-plan generation (a "time-step")
         self._assigned: dict[int, list[Request]] = {
             w: [] for w in range(self.num_workers)}
@@ -107,11 +111,13 @@ class RequestScheduler:
         """
         if self._head >= len(self._pending):
             return []
-        if self._tech is None or self._tech.remaining <= 0:
+        if (self._tech is None or self._force_replan
+                or self._tech.remaining <= 0):
             # also covers the backlog having drained mid-plan: granted
             # sizes are clamped to the backlog, so an emptied queue
             # implies remaining <= 0 and the next pull re-plans here
             self._tech = self._new_tech()
+            self._force_replan = False
         grant = self._tech.next_chunk(worker)
         take = min(grant.size, self.backlog)
         head = self._head

@@ -137,3 +137,118 @@ def test_elastic_restart_example_handoff():
     assert new.weights.sum() == pytest.approx(3)
     # the learned fast->slow ordering survives the shrink
     assert new.weights[0] == new.weights.max()
+
+
+# ---------------------------------------------------------------------------
+# the promoted serving path: repro.serve.elastic.resize_scheduler
+# ---------------------------------------------------------------------------
+
+from repro.serve import Request, RequestScheduler  # noqa: E402
+from repro.serve.elastic import (  # noqa: E402
+    elastic_handoff as lib_handoff,
+    resize_scheduler,
+)
+
+
+def _loaded_scheduler(p=4, n=2400, technique="awf_b", rounds=4):
+    """A scheduler mid-wave: several measured chunks per worker (enough
+    to cross the adaptive techniques' adaptation points), backlog left."""
+    s = RequestScheduler(num_workers=p, technique=technique)
+    for i in range(n):
+        s.submit(Request(rid=i, arrival=0.0, prompt_len=128,
+                         max_new_tokens=64))
+    for r in range(rounds):
+        for w in range(p):
+            chunk = s.pull(w)
+            assert chunk
+            # worker w is (1 + w/2)x slower: adaptive state becomes
+            # non-trivial
+            s.complete(w, elapsed=len(chunk) * (1.0 + 0.5 * w) * 1e-3)
+    assert s.backlog > 0
+    return s
+
+
+def _drain(s):
+    served = []
+    w = 0
+    while True:
+        chunk = s.pull(w % s.num_workers)
+        if not chunk:
+            break
+        served += [r.rid for r in chunk]
+        s.complete(w % s.num_workers, elapsed=len(chunk) * 1e-3)
+        w += 1
+    return served
+
+
+@pytest.mark.parametrize("technique", ["awf_b", "af", "bold"])
+@pytest.mark.parametrize("new_p", [2, 6])
+def test_resize_scheduler_mid_wave(technique, new_p):
+    """Grow/shrink mid-wave: backlog moves wholesale, the next plan is
+    built over the new worker count with inherited adaptive state, and
+    every unserved request is still served exactly once."""
+    s = _loaded_scheduler(technique=technique)
+    already = 2400 - s.backlog
+    old_tech = s._tech
+    s2 = resize_scheduler(s, new_p)
+    assert s2.num_workers == new_p
+    assert s2.backlog == s.backlog
+    assert s2._force_replan
+    served = _drain(s2)
+    # conservation: the requests the old wave had not yet granted, each
+    # exactly once, in queue order
+    assert served == list(range(already, 2400))
+    # the re-plan happened over new_p with state inherited from the old
+    # technique (not a cold restart)
+    assert s2._tech is not old_tech
+    assert s2._tech.p == new_p
+    assert not s2._force_replan
+
+
+def test_resize_scheduler_shrink_keeps_survivor_telemetry():
+    s = _loaded_scheduler(technique="awf_b")
+    old = s._tech
+    s2 = resize_scheduler(s, 2)
+    s2.pull(0)  # triggers the forced re-plan + inherit
+    np.testing.assert_array_equal(s2._tech._sum_time[:2], old._sum_time[:2])
+    # the learned fast->slow ordering survives among the survivors
+    assert s2._tech.weights[0] > s2._tech.weights[1]
+
+
+def test_resize_scheduler_equal_p_byte_identical():
+    """num_workers unchanged => the handoff is an exact state copy (the
+    equal-p contract of Technique.inherit at the scheduler level)."""
+    s = _loaded_scheduler(technique="awf_b")
+    old = s._tech
+    w0 = np.copy(old.weights)
+    st0 = np.copy(old._sum_time)
+    wd0 = np.copy(old._wap_den)
+    s2 = resize_scheduler(s, s.num_workers)
+    s2.pull(0)
+    np.testing.assert_array_equal(s2._tech.weights, w0)
+    np.testing.assert_array_equal(s2._tech._sum_time, st0)
+    np.testing.assert_array_equal(s2._tech._wap_den, wd0)
+
+
+def test_resize_scheduler_drops_outstanding_grants():
+    s = _loaded_scheduler()
+    s.pull(0)  # leave a grant open on worker 0
+    assert 0 in s._outstanding
+    s2 = resize_scheduler(s, 3)
+    assert s2._outstanding == {}
+    # a late complete() against the new scheduler is a harmless no-op
+    s2.complete(0, elapsed=1.0)
+
+
+def test_resize_scheduler_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        resize_scheduler(_loaded_scheduler(), 0)
+
+
+def test_example_reexports_library_handoff():
+    """The example's elastic_handoff IS the library path now."""
+    spec = importlib.util.spec_from_file_location(
+        "elastic_restart", EXAMPLES / "elastic_restart.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.elastic_handoff is lib_handoff

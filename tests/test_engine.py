@@ -118,3 +118,63 @@ def test_engine_plans_only_on_admission_change(model):
     # telemetry still records one plan per admission, in order
     assert [r.instance for r in eng.kernel_records] == \
         list(range(len(eng.kernel_records)))
+
+
+def test_engine_slot_disable_mid_stream(model):
+    """Failing a lane mid-stream requeues its in-flight work: every
+    request still completes exactly once, on the surviving lanes."""
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=3, max_len=64)
+    for i in range(9):
+        eng.submit(_req(i, new=4))
+    first = eng.run(max_steps=4)   # mid-prefill on all three lanes
+    eng.set_slot_enabled(1, False)
+    rest = eng.run()
+    assert first.completed + rest.completed == 9
+    for i in range(9):
+        out = eng.output(i)
+        assert len(out) == 4, f"request {i} lost across the lane fault"
+    assert eng._active[1] is None  # the dead lane stayed out of service
+
+
+def test_engine_all_slots_disabled_terminates(model):
+    """run() must not spin when every lane is out of service — the
+    backlog waits for a re-enable instead of burning decode steps."""
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64)
+    for i in range(4):
+        eng.submit(_req(i, new=4))
+    eng.set_slot_enabled(0, False)
+    eng.set_slot_enabled(1, False)
+    stats = eng.run()
+    assert stats.completed == 0
+    assert eng.sched.backlog == 4
+    eng.set_slot_enabled(0, True)
+    stats2 = eng.run()
+    assert stats2.completed == 4
+    for i in range(4):
+        assert len(eng.output(i)) == 4
+
+
+def test_engine_disabled_slot_drops_partial_measurement(model):
+    """The interrupted chunk's step count must not reach the scheduler:
+    a partial measurement attributed to a dead lane would corrupt the
+    adaptive weights."""
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64, technique="awf_c")
+    reported = []
+    orig = eng.sched.complete
+
+    def spy(worker, elapsed):
+        reported.append(worker)
+        orig(worker, elapsed=elapsed)
+
+    eng.sched.complete = spy
+    for i in range(6):
+        eng.submit(_req(i, new=4))
+    eng.run(max_steps=3)
+    before = list(reported)
+    eng.set_slot_enabled(0, False)
+    assert reported == before  # disable itself reported nothing
+    eng.run()
+    assert 1 in reported       # the survivor still reports

@@ -1,0 +1,83 @@
+"""make_traffic regression tests: seed/kind determinism for every
+traffic kind, arrival-program shape for the trial scenarios' new
+``diurnal``/``flash_crowd`` kinds, and the documented seed-independence
+of the ``uniform`` control (identical requests by construction — the
+one kind trial seeds intentionally cannot vary)."""
+
+import numpy as np
+import pytest
+
+from repro.serve import make_traffic
+
+SEEDED_KINDS = ("heavy_tail", "spiky", "zipf", "bursty", "diurnal",
+                "flash_crowd")
+ALL_KINDS = ("uniform",) + SEEDED_KINDS
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_same_seed_reproduces(kind):
+    a = make_traffic(kind, n=200, seed=5)
+    b = make_traffic(kind, n=200, seed=5)
+    assert a == b
+    assert len(a) == 200
+    assert [r.rid for r in a] == list(range(200))
+
+
+@pytest.mark.parametrize("kind", SEEDED_KINDS)
+def test_different_seed_differs(kind):
+    a = make_traffic(kind, n=200, seed=5)
+    b = make_traffic(kind, n=200, seed=6)
+    assert a != b
+
+
+def test_uniform_is_seed_independent_by_design():
+    """The uniform control is identical requests, all pre-arrived — the
+    balanced baseline must not wobble across trial seeds."""
+    assert make_traffic("uniform", n=50, seed=0) == \
+        make_traffic("uniform", n=50, seed=123)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_requests_well_formed(kind):
+    for r in make_traffic(kind, n=150, seed=3):
+        assert r.prompt_len >= 1
+        assert r.max_new_tokens >= 1
+        assert r.arrival >= 0.0
+        assert r.cost > 0.0
+
+
+@pytest.mark.parametrize("kind", ("diurnal", "flash_crowd"))
+def test_arrival_programs_sorted_and_bounded(kind):
+    arr = [r.arrival for r in make_traffic(kind, n=400, seed=7)]
+    assert arr == sorted(arr)  # rid order is arrival order
+    assert 0.0 <= min(arr) and max(arr) <= 0.65
+
+
+def test_diurnal_has_trough_and_peak():
+    """Inverse-CDF sampling of the sinusoidal rate: the densest tenth of
+    the day must carry several times the sparsest tenth."""
+    arr = np.array([r.arrival for r in make_traffic("diurnal", n=2000,
+                                                    seed=0)])
+    counts, _ = np.histogram(arr, bins=10, range=(0.0, 0.6))
+    assert counts.max() > 3 * max(counts.min(), 1)
+
+
+def test_flash_crowd_spike_fraction():
+    """~35% of requests land inside one 0.02-wide window."""
+    arr = np.array([r.arrival for r in make_traffic("flash_crowd", n=1000,
+                                                    seed=11)])
+    windows = np.array([((arr >= t0) & (arr <= t0 + 0.021)).sum()
+                        for t0 in np.arange(0.0, 0.6, 0.005)])
+    frac = windows.max() / arr.size
+    assert 0.3 <= frac <= 0.45
+
+
+def test_bursty_arrivals_are_waves():
+    arr = sorted({r.arrival for r in make_traffic("bursty", n=400, seed=1)})
+    # a handful of distinct burst instants, not a continuum
+    assert 1 <= len(arr) <= 8
+
+
+def test_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown traffic kind"):
+        make_traffic("nope", n=10, seed=0)

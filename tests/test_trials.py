@@ -1,0 +1,348 @@
+"""Scenario trial harness tests (repro.trials).
+
+The contracts the benchmark suite stands on: trial determinism (same
+Scenario + seed ⇒ byte-identical TrialResult; different seeds ⇒
+distinct traffic), request conservation across replica kill/recover
+and scale events (property-tested, mirroring test_stealing.py's
+conservation suite), trace replay, and the statistics layer (seeded
+bootstrap CIs, percentiles, tolerance-band gates).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.serve import (
+    ClusterRouter,
+    ReplicaKill,
+    ReplicaRecover,
+    ScaleTo,
+    make_traffic,
+    simulate_cluster,
+)
+from repro.trials import (
+    Scenario,
+    ToleranceBand,
+    bootstrap_ci,
+    check_gates,
+    ci_nonoverlap,
+    compare_cells,
+    elastic_program,
+    failure_program,
+    latency_percentiles,
+    requests_from_trace,
+    run_cell,
+    run_suite,
+    run_trial,
+    standard_suite,
+    summarize_cell,
+    thermal_program,
+    trace_from_requests,
+)
+
+#: small scenarios exercising every event type (fast enough per-trial)
+FAULTY = [
+    Scenario(name="kill_recover", traffic="spiky", n=120, num_replicas=3,
+             events=failure_program(kill_at=0.05, replicas=(0,),
+                                    recover_at=0.2)),
+    Scenario(name="kill_forever", traffic="zipf", n=120, num_replicas=3,
+             events=failure_program(kill_at=0.05, replicas=(0, 1))),
+    Scenario(name="scale_up", traffic="bursty", n=120, num_replicas=2,
+             events=elastic_program((0.05, 5))),
+    Scenario(name="scale_down", traffic="spiky", n=120, num_replicas=4,
+             events=elastic_program((0.05, 2))),
+    Scenario(name="thermal", traffic="diurnal", n=120, num_replicas=3,
+             events=thermal_program(0, times=(0.05, 0.1),
+                                    speeds=(2.0, 5.0))),
+]
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", FAULTY, ids=lambda s: s.name)
+def test_trial_determinism_same_seed_byte_identical(scenario):
+    a = run_trial(scenario, "awf_b/fac2", seed=3)
+    b = run_trial(scenario, "awf_b/fac2", seed=3)
+    assert a == b
+    assert a.digest() == b.digest()
+
+
+def test_trial_different_seeds_distinct_traffic():
+    sc = FAULTY[0]
+    a = run_trial(sc, "awf_b/fac2", seed=0)
+    b = run_trial(sc, "awf_b/fac2", seed=1)
+    assert a.digest() != b.digest()
+    assert a.latencies != b.latencies
+
+
+def test_trace_scenario_ignores_seed():
+    trace = trace_from_requests(make_traffic("spiky", n=60, seed=9))
+    sc = Scenario(name="replay", n=60, num_replicas=2, trace=trace)
+    a, b = run_trial(sc, "fac2/fac2", seed=0), run_trial(sc, "fac2/fac2",
+                                                         seed=5)
+    # seeds differ, workload (and therefore the timeline) does not
+    assert a.latencies == b.latencies and a.makespan == b.makespan
+
+
+def test_trace_round_trip(tmp_path):
+    from repro.trials import load_trace, save_trace
+    reqs = make_traffic("bursty", n=40, seed=2)
+    p = tmp_path / "trace.json"
+    save_trace(p, reqs)
+    trace = load_trace(p)
+    assert trace == trace_from_requests(reqs)
+    back = requests_from_trace(trace)
+    assert back == reqs
+
+
+# ---------------------------------------------------------------------------
+# conservation across faults/elasticity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule",
+                         ["static/fac2", "fac2/fac2", "awf_b/fac2"])
+@pytest.mark.parametrize("scenario", FAULTY, ids=lambda s: s.name)
+def test_every_request_served_exactly_once(scenario, schedule):
+    r = run_trial(scenario, schedule, seed=1)
+    assert r.served_once and r.n_served == r.n_submitted
+    assert r.complete
+
+
+def test_requeued_latency_measured_from_original_arrival():
+    """A request lost to a kill pays its redo time in its own latency:
+    the victims' latencies must reach past the kill point even though
+    the requeued copies' arrivals were clamped to it."""
+    reqs = make_traffic("spiky", n=120, seed=4)
+    kill_t = 0.05
+    out = simulate_cluster(
+        reqs, num_replicas=3, schedule="fac2/fac2",
+        events=[ReplicaKill(time=kill_t, replica=0)],
+        return_completions=True)
+    finish = {rid: t for rid, t in out["completions"]}
+    assert len(finish) == len(reqs)
+    lat = [finish[r.rid] - r.arrival for r in reqs]
+    # spiky pre-arrives everything, so some request finished after the
+    # kill must carry latency > kill_t (it waited through the fault)
+    assert max(lat) > kill_t
+    assert min(lat) > 0
+
+
+def test_killed_replica_stays_dead_until_recover():
+    reqs = make_traffic("spiky", n=200, seed=0)
+    out = simulate_cluster(
+        reqs, num_replicas=3, schedule="fac2/fac2",
+        events=[ReplicaKill(time=0.02, replica=2),
+                ScaleTo(time=0.05, num_replicas=3)],
+        return_completions=True)
+    assert sorted(r for r, _ in out["completions"]) == sorted(
+        r.rid for r in reqs)
+    # ScaleTo must not resurrect an explicitly killed replica: its
+    # finish clock stays clamped at the kill time
+    assert out["replica_finish"][2] <= 0.02 + 1e-12
+
+
+def test_scale_up_activates_new_replicas():
+    reqs = make_traffic("bursty", n=300, seed=1)
+    out = simulate_cluster(reqs, num_replicas=2, schedule="fac2/fac2",
+                           events=[ScaleTo(time=0.05, num_replicas=6)],
+                           return_completions=True)
+    assert sorted(r for r, _ in out["completions"]) == sorted(
+        r.rid for r in reqs)
+    assert len(out["replica_requests"]) == 6
+    assert sum(out["replica_requests"][2:]) > 0  # grown replicas served
+
+
+def test_events_rejected_for_steal_band():
+    reqs = make_traffic("spiky", n=60, seed=0)
+    with pytest.raises(ValueError, match="steal"):
+        simulate_cluster(reqs, num_replicas=2, schedule="ws_rr,4/fac2",
+                         events=[ReplicaKill(time=0.1, replica=0)])
+    router = ClusterRouter(2, schedule="ws_rr,4")
+    with pytest.raises(ValueError, match="steal"):
+        router.set_active([0])
+
+
+def test_cluster_record_request_timestamps():
+    from repro.core.metrics import LoopRecorder
+    from repro.serve.cluster import ClusterRecord  # noqa: F401
+    reqs = make_traffic("spiky", n=80, seed=2)
+    rec = LoopRecorder()
+    out = simulate_cluster(reqs, num_replicas=2, schedule="fac2/fac2",
+                           recorder=rec, return_completions=True)
+    # the per-request timeline is (finish, rid)-sorted and complete
+    lats = np.asarray(out["latencies"])
+    assert lats.shape == (len(reqs),)
+    assert (lats > 0).all()
+    assert out["p999"] >= out["p99"] >= out["p50"] > 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=20, max_value=160),
+        seed=st.integers(min_value=0, max_value=10_000),
+        kill_t=st.floats(min_value=0.005, max_value=0.5),
+        recover=st.booleans(),
+        node=st.sampled_from(["static", "fac2", "awf_b", "gss"]),
+    )
+    def test_property_conservation_under_faults(n, seed, kill_t, recover,
+                                                node):
+        """Every submitted request is served exactly once, for any kill
+        time, any recovery, any node technique, any stream."""
+        reqs = make_traffic("spiky", n=n, seed=seed)
+        events = [ReplicaKill(time=kill_t, replica=0)]
+        if recover:
+            events.append(ReplicaRecover(time=kill_t * 2, replica=0))
+        out = simulate_cluster(reqs, num_replicas=3,
+                               schedule=f"{node}/fac2", events=events,
+                               return_completions=True)
+        assert sorted(rid for rid, _ in out["completions"]) == sorted(
+            r.rid for r in reqs)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        start=st.integers(min_value=2, max_value=6),
+        target=st.integers(min_value=1, max_value=8),
+        t=st.floats(min_value=0.005, max_value=0.5),
+    )
+    def test_property_conservation_under_scaling(seed, start, target, t):
+        reqs = make_traffic("bursty", n=100, seed=seed)
+        out = simulate_cluster(reqs, num_replicas=start,
+                               schedule="fac2/fac2",
+                               events=[ScaleTo(time=t, num_replicas=target)],
+                               return_completions=True)
+        assert sorted(rid for rid, _ in out["completions"]) == sorted(
+            r.rid for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# executor shapes
+# ---------------------------------------------------------------------------
+
+
+def test_run_cell_paired_seeds():
+    sc = Scenario(name="mini", traffic="spiky", n=60, num_replicas=2)
+    cell = run_cell(sc, "fac2/fac2", trials=3, base_seed=7)
+    assert [r.seed for r in cell] == [7, 8, 9]
+    # matched pairs: another schedule at the same base seed sees the
+    # same streams, so per-trial n_submitted agree
+    other = run_cell(sc, "static/fac2", trials=3, base_seed=7)
+    assert [r.n_submitted for r in cell] == [r.n_submitted for r in other]
+
+
+def test_run_suite_shape():
+    sc = Scenario(name="mini", traffic="spiky", n=40, num_replicas=2)
+    suite = run_suite([sc], ["static/fac2", "fac2/fac2"], trials=2)
+    assert set(suite) == {"mini"}
+    assert set(suite["mini"]) == {"static/fac2", "fac2/fac2"}
+    assert all(len(v) == 2 for v in suite["mini"].values())
+
+
+def test_standard_suite_contents():
+    names = [s.name for s in standard_suite()]
+    for required in ("diurnal", "flash_crowd", "replica_failure",
+                     "elastic_scale"):
+        assert required in names
+    quick = standard_suite(quick=True)
+    assert all(s.n < 800 for s in quick)
+    # event times scale with n so the quick faults stay mid-stream
+    full = {s.name: s for s in standard_suite()}
+    for s in quick:
+        if s.events:
+            assert s.events[0].time < full[s.name].events[0].time
+
+
+# ---------------------------------------------------------------------------
+# statistics
+# ---------------------------------------------------------------------------
+
+
+def test_bootstrap_ci_seeded_and_sane():
+    rng = np.random.default_rng(0)
+    x = rng.normal(10.0, 1.0, size=40)
+    a = bootstrap_ci(x, seed=1)
+    b = bootstrap_ci(x, seed=1)
+    c = bootstrap_ci(x, seed=2)
+    assert a == b and a != c
+    lo, hi = a
+    assert lo < float(np.mean(x)) < hi
+    assert hi - lo < 2.0  # ~0.16 sem -> interval well under 2
+
+
+def test_bootstrap_ci_edge_cases():
+    lo, hi = bootstrap_ci([])
+    assert math.isnan(lo) and math.isnan(hi)
+    assert bootstrap_ci([4.2]) == (4.2, 4.2)
+    lo, hi = bootstrap_ci([3.0, 3.0, 3.0])
+    assert lo == hi == 3.0
+
+
+def test_bootstrap_ci_custom_stat():
+    x = np.arange(100.0)
+    lo, hi = bootstrap_ci(x, stat=lambda s: float(np.percentile(s, 99)),
+                          n_boot=200, seed=0)
+    assert 80.0 <= lo <= hi <= 99.0
+
+
+def test_latency_percentiles():
+    p = latency_percentiles(np.arange(1, 1001, dtype=float))
+    assert p["p50"] == pytest.approx(500.5)
+    assert p["p999"] >= p["p99"] > p["p50"]
+    assert latency_percentiles([]) == {"p50": 0.0, "p99": 0.0, "p999": 0.0}
+
+
+def test_summarize_and_compare_cells():
+    sc = Scenario(name="mini", traffic="flash_crowd", n=120, num_replicas=3)
+    fast = run_cell(sc, "awf_b/fac2", trials=4)
+    slow = run_cell(sc, "static/fac2", trials=4)
+    summ = summarize_cell(fast)
+    for m in ("mean_latency", "p50", "p99", "p999", "makespan"):
+        s = summ[m]
+        assert s["trials"] == 4
+        assert s["ci"][0] <= s["mean"] <= s["ci"][1]
+        assert all(map(math.isfinite, [s["mean"], *s["ci"]]))
+    cmp_ = compare_cells(fast, slow, metric="p99")
+    assert cmp_["winner"] == "a"
+    assert isinstance(cmp_["significant"], bool)
+
+
+def test_ci_nonoverlap():
+    assert ci_nonoverlap((0, 1), (2, 3))
+    assert ci_nonoverlap((2, 3), (0, 1))
+    assert not ci_nonoverlap((0, 2), (1, 3))
+    assert not ci_nonoverlap((0, 5), (1, 2))
+
+
+def test_tolerance_band_unpacks_like_tuple():
+    band = ToleranceBand(0.8, 3.0)
+    lo, hi = band
+    assert (lo, hi) == (0.8, 3.0)
+    assert band.contains(1.0) and not band.contains(3.5)
+    assert not band.contains(float("nan"))
+    with pytest.raises(ValueError):
+        ToleranceBand(2.0, 1.0)
+
+
+def test_check_gates():
+    ok, rows = check_gates([
+        ("in", 1.5, ToleranceBand(1.0, 2.0)),
+        ("out", 9.0, ToleranceBand(0.0, 1.0)),
+    ])
+    assert not ok
+    assert [r["ok"] for r in rows] == [True, False]
+    assert rows[1]["gate"] == "out" and rows[1]["value"] == 9.0
+    ok, _ = check_gates([("in", 1.5, ToleranceBand(1.0, 2.0))])
+    assert ok
