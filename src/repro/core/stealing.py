@@ -164,6 +164,7 @@ class _StealBase(Technique):
         """Move ceil(half) of the victim's remaining iterations, taken
         from the *back* of its deque, onto the thief's (empty) deque."""
         dq = self._deques[victim]
+        # integer iteration bounds: order-exact  # lint: disable=DET004
         target = (sum(hi - lo for lo, hi in dq) + 1) // 2
         stolen: List[List[int]] = []
         got = 0

@@ -261,6 +261,7 @@ def flash_kv_group_costs(bh: int, s: int, block_q: int, block_k: int, *,
                 # so its output block is initialized and written
                 kjs = [0]
             group_kjs.append(kjs)
+            # integer block extents: order-exact  # lint: disable=DET004
             costs.append(sum(min(lim, (kj + 1) * block_k) - kj * block_k
                              or block_k for kj in kjs))
     return group_kjs, np.asarray(costs, np.float64), lens

@@ -345,7 +345,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                         scan_unroll=True)
             c1, w1 = _cost_and_wire(_lower_compile(mini1, shape, mesh, rules))
             c2, w2 = _cost_and_wire(_lower_compile(mini2, shape, mesh, rules))
-            for k in set(c1) | set(c2):
+            for k in sorted(set(c1) | set(c2)):
                 body = c2.get(k, 0.0) - c1.get(k, 0.0)
                 cost[k] = cost_full.get(k, 0.0) + (g_full - 1) * body
             wire_body = (w2["total_wire_bytes"] - w1["total_wire_bytes"])

@@ -81,10 +81,12 @@ def elastic_handoff(n: int = 1000, old_p: int = 4, new_p: int = 3,
     """
     # the chunk-plan view: re-balance the remaining iterations
     plan = plan_schedule("fac2", n=n, p=old_p)
+    # integer chunk sizes: order-exact  # lint: disable=DET004
     done = sum(c.size for c in plan.chunks[:chunks_done])
     # note: replan shifts chunk starts by `done` (they index the original
     # iteration space), so conservation is checked on sizes, not validate()
     new_plan = replan(plan, new_p=new_p, done_iterations=done)
+    # integer chunk sizes: order-exact  # lint: disable=DET004
     assert sum(c.size for c in new_plan.chunks) == n - done
 
     # the adaptive-state view: run the old technique for a few grants so

@@ -1,0 +1,31 @@
+"""repro-lint: repo-specific static analysis for the LB4OMP reproduction.
+
+An AST-based pass/visitor framework (`python -m tools.lint --check`) with
+four repo-specific passes guarding the invariants every PR must preserve:
+
+- **determinism** (DET*) — unseeded RNG, wall-clock reads, unordered-set
+  iteration, builtin float ``sum()``, float ``==`` in the simulation
+  paths whose three execution forms must stay bit-exact;
+- **trace-safety** (TRC*) — host-control-flow / host-cast / NumPy /
+  side-effect hazards inside jit-reachable code;
+- **layering** (LAY*) — the `docs/architecture.md` layer map enforced as
+  an import-graph check (cycles are errors);
+- **registry-contract** (REG*) — every registered technique's
+  ``TechniqueSpec`` flags consistent with its bound execution forms,
+  plus the docs-sync gate.
+
+See `docs/static_analysis.md` for the rule catalog, suppression syntax
+(`# lint: disable=RULE`), and the baseline semantics
+(`tools/lint/baseline.json`).
+"""
+
+from .core import (  # noqa: F401
+    Finding,
+    LintPass,
+    ProjectPass,
+    Rule,
+    SEVERITIES,
+    all_rules,
+    lint_paths,
+    lint_source,
+)

@@ -1,0 +1,157 @@
+"""CLI driver: ``python -m tools.lint --check``.
+
+Exit codes: 0 = clean (every finding suppressed or baselined, no unused
+baseline entries), 1 = unbaselined findings or baseline rot, 2 = usage.
+
+Common invocations::
+
+    python -m tools.lint --check                    # the CI gate
+    python -m tools.lint --check --json out.json    # + findings artifact
+    python -m tools.lint --list-rules               # rule catalog
+    python -m tools.lint --check src/repro/core     # subtree only
+    python -m tools.lint --update-baseline          # accept current state
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import (
+    DEFAULT_BASELINE,
+    REPO_ROOT,
+    _select,
+    all_rules,
+    apply_baseline,
+    collect_files,
+    lint_files,
+    load_baseline,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ("src/repro",)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description=("repro-lint: determinism, trace-safety, layering, "
+                     "and registry-contract static analysis "
+                     "(see docs/static_analysis.md)"))
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--check", action="store_true",
+                    help="run all passes and gate on unbaselined findings")
+    ap.add_argument("--json", metavar="FILE",
+                    help="write every finding (incl. baselined/suppressed) "
+                         "as JSON")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help=f"baseline file (default {DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings, "
+                         "keeping existing justifications")
+    ap.add_argument("--select", metavar="IDS",
+                    help="comma-separated rule-ID prefixes "
+                         "(e.g. DET001,TRC)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--no-project-passes", action="store_true",
+                    help="skip whole-repo passes (layering, registry); "
+                         "used for fast partial-tree runs")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.name:28s} [{r.severity}]")
+            print(f"        {r.rationale}")
+        return 0
+
+    if not (args.check or args.update_baseline):
+        ap.print_usage()
+        print("pass --check, --update-baseline, or --list-rules",
+              file=sys.stderr)
+        return 2
+
+    paths = [Path(p) for p in (args.paths or
+                               [REPO_ROOT / p for p in DEFAULT_PATHS])]
+    select = args.select.split(",") if args.select else None
+    baseline_path = Path(args.baseline) if args.baseline \
+        else DEFAULT_BASELINE
+
+    files = collect_files(paths)
+    findings = lint_files(
+        files, select=select,
+        project_passes_enabled=not args.no_project_passes)
+
+    entries = load_baseline(baseline_path)
+    findings, unused = apply_baseline(findings, entries)
+    # baseline rot is only judgeable for entries this run could have
+    # re-matched: a partial-tree or --select run must not flag the rest
+    # of the baseline as unused
+    unused = [e for e in unused
+              if e["path"] in files and _select(select, e["rule"])]
+
+    if args.update_baseline:
+        active = [f for f in findings if not f.suppressed]
+        # entries this run could not have re-matched (other files, other
+        # rules) pass through untouched — a subtree run must not drop them
+        keep = [e for e in entries
+                if e["path"] not in files or not _select(select, e["rule"])]
+        write_baseline(active, baseline_path, old_entries=entries,
+                       keep_entries=keep)
+        print(f"wrote {baseline_path} ({len(active) + len(keep)} entries) "
+              f"— fill in any TODO justifications before committing")
+        return 0
+
+    gating = [f for f in findings if not f.baselined and not f.suppressed]
+    shown = [f for f in findings if not f.suppressed]
+    for f in shown:
+        print(f.render())
+
+    if args.json:
+        payload = {
+            "tool": "repro-lint",
+            "paths": [str(p) for p in paths],
+            "rules": [dict(id=r.id, name=r.name, severity=r.severity)
+                      for r in all_rules()],
+            "findings": [f.to_dict() for f in findings],
+            "gating": len(gating),
+            "unused_baseline_entries": unused,
+        }
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n",
+                                   encoding="utf-8")
+
+    n_base = sum(1 for f in findings if f.baselined)
+    n_supp = sum(1 for f in findings if f.suppressed)
+    status = 0
+    if unused:
+        print(f"\n{len(unused)} unused baseline entr"
+              f"{'y' if len(unused) == 1 else 'ies'} (fixed findings must "
+              f"leave the baseline — run --update-baseline):",
+              file=sys.stderr)
+        for e in unused:
+            print(f"  {e['rule']} {e['path']}: {e['context']!r}",
+                  file=sys.stderr)
+        status = 1
+    if gating:
+        print(f"\nFAIL: {len(gating)} unbaselined finding"
+              f"{'s' if len(gating) != 1 else ''} "
+              f"({n_base} baselined, {n_supp} suppressed inline)",
+              file=sys.stderr)
+        status = 1
+    else:
+        print(f"repro-lint OK: 0 gating findings "
+              f"({n_base} baselined, {n_supp} suppressed inline)")
+    return status
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:  # e.g. `--list-rules | head`
+        import os
+
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        raise SystemExit(0)

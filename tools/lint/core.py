@@ -1,0 +1,358 @@
+"""Pass/visitor core for repro-lint.
+
+The pieces every pass shares:
+
+- :class:`Rule` — one checkable invariant (stable ID, severity, catalog
+  text for `docs/static_analysis.md`);
+- :class:`Finding` — one violation, anchored ``file:line`` with the
+  stripped source line as *context* (baseline matching survives line
+  drift);
+- :class:`LintPass` — per-file AST passes (a ``visit(ctx)`` over one
+  parsed module);
+- :class:`ProjectPass` — whole-repo passes (import graph, registry);
+- inline suppressions — ``# lint: disable=RULE[,RULE...]`` on the
+  flagged line, or alone on the line directly above it;
+- the checked-in baseline (`tools/lint/baseline.json`) — findings
+  accepted *with a written justification*; everything else gates.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Optional, Sequence
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+SEVERITIES = ("error", "warning")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Za-z0-9_*]+(?:\s*,\s*[A-Za-z0-9_*]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One checkable invariant; the unit of the rule catalog."""
+
+    id: str  # stable, e.g. "DET001"
+    name: str  # short kebab-case slug, e.g. "unseeded-rng"
+    severity: str  # "error" | "warning"
+    rationale: str  # why this is a hazard in THIS repo
+    example: str = ""  # a one-line positive example
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity must be one of {SEVERITIES}, "
+                             f"got {self.severity!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line``.
+
+    ``context`` is the stripped source line — the baseline matches on
+    ``(rule, path, context)`` so accepted findings survive unrelated
+    line-number drift.
+    """
+
+    rule: Rule
+    path: str  # repo-relative, "/" separators
+    line: int
+    col: int
+    message: str
+    context: str = ""
+    baselined: bool = False
+    suppressed: bool = False
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule.id, self.path, self.context)
+
+    def to_dict(self) -> dict:
+        return dict(rule=self.rule.id, name=self.rule.name,
+                    severity=self.rule.severity, path=self.path,
+                    line=self.line, col=self.col, message=self.message,
+                    context=self.context, baselined=self.baselined,
+                    suppressed=self.suppressed)
+
+    def render(self) -> str:
+        tag = ""
+        if self.baselined:
+            tag = " [baselined]"
+        elif self.suppressed:
+            tag = " [suppressed]"
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule.id} [{self.rule.severity}]{tag} {self.message}")
+
+
+class FileContext:
+    """Everything a per-file pass sees: path, source, lines, parsed AST."""
+
+    def __init__(self, path: str, source: str,
+                 tree: Optional[ast.AST] = None):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: Rule, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule=rule, path=self.path, line=line, col=col,
+                       message=message, context=self.line_text(line))
+
+
+class LintPass:
+    """Base for per-file passes.  Subclasses set ``name``/``rules`` and
+    implement :meth:`visit`; ``applies_to`` scopes the pass to the repo
+    paths where its invariants hold."""
+
+    name: str = ""
+    rules: Sequence[Rule] = ()
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def visit(self, ctx: FileContext) -> list[Finding]:
+        raise NotImplementedError
+
+
+class ProjectPass:
+    """Base for whole-repo passes (import graph, registry contracts)."""
+
+    name: str = ""
+    rules: Sequence[Rule] = ()
+
+    def run(self, files: dict[str, FileContext]) -> list[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def _suppressions(lines: Sequence[str]) -> dict[int, set[str]]:
+    """Map line number -> rule IDs disabled there.
+
+    A ``# lint: disable=...`` comment applies to its own line; when the
+    comment stands alone on a line, it applies to the next line instead
+    (the usual place for a long flagged statement).
+    """
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        ids = {tok.strip().upper() for tok in m.group(1).split(",")}
+        target = i + 1 if text.strip().startswith("#") else i
+        out.setdefault(target, set()).update(ids)
+        # a trailing comment also covers a multi-line statement's first
+        # line; standalone comments only cover the following line
+        if not text.strip().startswith("#"):
+            out.setdefault(i, set()).update(ids)
+    return out
+
+
+def _is_suppressed(f: Finding, supp: dict[int, set[str]]) -> bool:
+    ids = supp.get(f.line, ())
+    return bool(ids) and ("ALL" in ids or "*" in ids or f.rule.id in ids)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Path = DEFAULT_BASELINE) -> list[dict]:
+    if not Path(path).exists():
+        return []
+    data = json.loads(Path(path).read_text(encoding="utf-8"))
+    entries = data.get("findings", data) if isinstance(data, dict) else data
+    for e in entries:
+        for field in ("rule", "path", "context", "justification"):
+            if field not in e:
+                raise ValueError(
+                    f"baseline entry missing {field!r}: {e!r} — every "
+                    f"accepted finding needs a written justification")
+        if not str(e["justification"]).strip():
+            raise ValueError(f"baseline entry for {e['rule']} at "
+                             f"{e['path']} has an empty justification")
+    return entries
+
+
+def apply_baseline(findings: list[Finding],
+                   entries: list[dict]) -> tuple[list[Finding], list[dict]]:
+    """Mark findings covered by the baseline; return (findings, unused).
+
+    Matching is multiset-style on ``(rule, path, context)`` — two
+    identical lines in one file need two entries — and unused entries
+    are reported so the baseline cannot silently rot.
+    """
+    budget: dict[tuple[str, str, str], int] = {}
+    for e in entries:
+        k = (e["rule"], e["path"], e["context"])
+        budget[k] = budget.get(k, 0) + 1
+    out: list[Finding] = []
+    for f in findings:
+        if not f.suppressed and budget.get(f.key, 0) > 0:
+            budget[f.key] -= 1
+            f = dataclasses.replace(f, baselined=True)
+        out.append(f)
+    unused: list[dict] = []
+    for e in entries:
+        k = (e["rule"], e["path"], e["context"])
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+            unused.append(e)
+    return out, unused
+
+
+def write_baseline(findings: Iterable[Finding], path: Path,
+                   old_entries: Sequence[dict] = (),
+                   keep_entries: Sequence[dict] = ()) -> None:
+    """Serialize active findings as the new baseline, keeping any
+    justification already written for a matching entry.
+    ``keep_entries`` pass through verbatim — the entries a partial-tree
+    run could not have re-matched and must not drop."""
+    just = {(e["rule"], e["path"], e["context"]): e["justification"]
+            for e in old_entries}
+    entries = [dict(e) for e in keep_entries]
+    for f in findings:
+        if f.suppressed:
+            continue
+        entries.append(dict(
+            rule=f.rule.id, path=f.path, context=f.context,
+            justification=just.get(
+                f.key, "TODO: justify or fix (placeholder written by "
+                       "--update-baseline)")))
+    entries.sort(key=lambda e: (e["path"], e["rule"], e["context"]))
+    payload = {
+        "comment": ("Accepted repro-lint findings.  Every entry needs a "
+                    "written justification; --check fails on any finding "
+                    "not listed here, and on unused entries."),
+        "findings": entries,
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n",
+                          encoding="utf-8")
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def _registered_passes():
+    # imported late so `tools.lint.core` stays importable from fixtures
+    from .passes import FILE_PASSES, PROJECT_PASSES
+    return FILE_PASSES, PROJECT_PASSES
+
+
+def all_rules() -> list[Rule]:
+    file_passes, project_passes = _registered_passes()
+    rules: list[Rule] = []
+    for p in (*file_passes, *project_passes):
+        rules.extend(p.rules)
+    return sorted(rules, key=lambda r: r.id)
+
+
+def _select(rules_filter: Optional[Sequence[str]],
+            rule_id: str) -> bool:
+    if not rules_filter:
+        return True
+    rid = rule_id.upper()
+    return any(rid.startswith(tok.strip().upper()) for tok in rules_filter)
+
+
+def lint_source(source: str, path: str = "<snippet>.py",
+                passes: Optional[Sequence[LintPass]] = None,
+                respect_suppressions: bool = True) -> list[Finding]:
+    """Run per-file passes over one source string (the fixture-test entry
+    point).  ``path`` matters: passes scope themselves by repo path."""
+    if passes is None:
+        passes, _ = _registered_passes()
+    ctx = FileContext(path, source)
+    supp = _suppressions(ctx.lines)
+    findings: list[Finding] = []
+    for p in passes:
+        if not p.applies_to(ctx.path):
+            continue
+        for f in p.visit(ctx):
+            if respect_suppressions and _is_suppressed(f, supp):
+                f = dataclasses.replace(f, suppressed=True)
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule.id))
+    return findings
+
+
+def collect_files(paths: Sequence[Path]) -> dict[str, FileContext]:
+    files: dict[str, FileContext] = {}
+    for base in paths:
+        base = Path(base)
+        candidates = ([base] if base.is_file()
+                      else sorted(base.rglob("*.py")))
+        for fp in candidates:
+            try:
+                rel = str(fp.resolve().relative_to(REPO_ROOT))
+            except ValueError:
+                rel = str(fp)
+            rel = rel.replace("\\", "/")
+            if rel in files:
+                continue
+            source = fp.read_text(encoding="utf-8")
+            files[rel] = FileContext(rel, source)
+    return files
+
+
+def lint_paths(paths: Sequence[Path],
+               select: Optional[Sequence[str]] = None,
+               project_passes_enabled: bool = True,
+               extra_project_passes: Optional[Sequence[ProjectPass]] = None,
+               ) -> list[Finding]:
+    """Run every pass over ``paths`` and return findings (suppressed ones
+    included, marked — the caller decides what gates)."""
+    return lint_files(collect_files(paths), select=select,
+                      project_passes_enabled=project_passes_enabled,
+                      extra_project_passes=extra_project_passes)
+
+
+def lint_files(files: dict[str, FileContext],
+               select: Optional[Sequence[str]] = None,
+               project_passes_enabled: bool = True,
+               extra_project_passes: Optional[Sequence[ProjectPass]] = None,
+               ) -> list[Finding]:
+    """:func:`lint_paths` over an already-collected file set (the CLI
+    collects once so it can scope baseline-rot detection to the files
+    actually linted)."""
+    file_passes, project_passes = _registered_passes()
+    findings: list[Finding] = []
+    for ctx in files.values():
+        supp = _suppressions(ctx.lines)
+        for p in file_passes:
+            if not p.applies_to(ctx.path):
+                continue
+            for f in p.visit(ctx):
+                if _is_suppressed(f, supp):
+                    f = dataclasses.replace(f, suppressed=True)
+                findings.append(f)
+    if project_passes_enabled:
+        for pp in (*project_passes, *(extra_project_passes or ())):
+            for f in pp.run(files):
+                ctx = files.get(f.path)
+                if ctx is not None and _is_suppressed(
+                        f, _suppressions(ctx.lines)):
+                    f = dataclasses.replace(f, suppressed=True)
+                findings.append(f)
+    if select:
+        findings = [f for f in findings if _select(select, f.rule.id)]
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule.id))
+    return findings

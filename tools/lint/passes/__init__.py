@@ -1,0 +1,30 @@
+"""Pass registry for repro-lint.
+
+``FILE_PASSES`` run per parsed module; ``PROJECT_PASSES`` run once over
+the whole file set.  Adding a pass here is all it takes to wire it into
+`python -m tools.lint --check` and the rule catalog.
+"""
+
+from .determinism import DeterminismPass
+from .trace_safety import TraceSafetyPass
+from .layering import LayeringPass
+from .registry_contract import RegistryContractPass
+
+FILE_PASSES = (
+    DeterminismPass(),
+    TraceSafetyPass(),
+)
+
+PROJECT_PASSES = (
+    LayeringPass(),
+    RegistryContractPass(),
+)
+
+__all__ = [
+    "FILE_PASSES",
+    "PROJECT_PASSES",
+    "DeterminismPass",
+    "TraceSafetyPass",
+    "LayeringPass",
+    "RegistryContractPass",
+]

@@ -1,0 +1,287 @@
+"""Determinism pass (DET*).
+
+The repo's headline invariant is *bit-exact* agreement across three
+execution forms of the same chunk calculus (event oracle, NumPy
+lockstep, jitted graph — see ``docs/architecture.md``).  Every hazard
+below has either already burned a PR or is one unseeded call away from
+doing so:
+
+- hidden global RNG state makes a "same seed" campaign unreproducible;
+- wall-clock reads inside simulated time conflate simulated and real
+  durations (telemetry outside the simulation contract is baselined,
+  not fixed);
+- iterating an unordered ``set`` feeds machine-dependent order into
+  ordered computation (dict build order, float accumulation order);
+- builtin ``sum()`` accumulates floats left-to-right while the
+  vectorized forms use NumPy's pairwise order — the exact mismatch
+  PR 7 hand-unrolled ``_numpy_order_sum`` to avoid;
+- ``==`` on floats is a latent cross-form tolerance bug.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import FileContext, Finding, LintPass, Rule
+
+DET001 = Rule(
+    "DET001", "unseeded-rng", "error",
+    rationale=(
+        "Module-level RNG calls (`np.random.rand`, `random.random`, "
+        "no-arg `default_rng()`/`Random()`) draw from hidden global or "
+        "OS-entropy state, so two runs of the same seeded campaign can "
+        "disagree.  Simulation paths must thread an explicitly seeded "
+        "`np.random.default_rng(seed)` / `random.Random(seed)` (or a jax "
+        "PRNG key) instead."),
+    example="noise = np.random.rand(p)  # in core/ or serve/",
+)
+
+DET002 = Rule(
+    "DET002", "wall-clock", "error",
+    rationale=(
+        "`time.time()` / `perf_counter()` / `monotonic()` / "
+        "`datetime.now()` read the host clock: results change run to "
+        "run, and inside simulated time they conflate simulated with "
+        "real durations.  Benchmark timing and operator telemetry are "
+        "legitimate — those sites are accepted in the baseline with a "
+        "justification, not silenced."),
+    example="t0 = time.time()  # inside a simulator step",
+)
+
+DET003 = Rule(
+    "DET003", "unordered-iteration", "error",
+    rationale=(
+        "Iterating a `set` / `frozenset` (or a union/intersection of "
+        "them) yields a hash-seed-dependent order.  When the loop body "
+        "builds a dict, accumulates floats, or emits records, the "
+        "output becomes machine-dependent — the PR-5-era "
+        "`for k in set(c1) | set(c2)` bug class.  Wrap the set in "
+        "`sorted(...)` to pin the order."),
+    example="for k in set(a) | set(b): out[k] = ...",
+)
+
+DET004 = Rule(
+    "DET004", "builtin-float-sum", "error",
+    rationale=(
+        "Builtin `sum()` folds left-to-right; `np.sum` uses pairwise "
+        "association.  Summing floats with one form in code that must "
+        "agree bit-for-bit with the other reintroduces the "
+        "reassociation hazard PR 7's `_numpy_order_sum` exists to "
+        "control.  Use `np.sum`/`math.fsum` for floats; integer sums "
+        "are exact and may suppress inline."),
+    example="total = sum(t for t in thread_times)",
+)
+
+DET005 = Rule(
+    "DET005", "float-equality", "error",
+    rationale=(
+        "`==`/`!=` against a float literal encodes an exact-bits "
+        "expectation that silently breaks under any reassociation, FMA "
+        "contraction, or x64 flag change.  Use an explicit tolerance, "
+        "or suppress inline where exactness is the very property under "
+        "test."),
+    example="if weight == 1.0: ...",
+)
+
+#: Paths whose determinism is contractual: the simulation/serving core.
+#: (models/, optim/, kernels/ draw through jax PRNG keys; launch/ is
+#: operational code covered only by DET002/DET003.)
+_RNG_SCOPES = ("src/repro/core/", "src/repro/serve/", "src/repro/trials/")
+_SCOPES = ("src/repro/",)
+
+#: Allowlisted wall-clock scopes (benchmark drivers measure real time by
+#: definition).  Telemetry inside src/repro is NOT allowlisted — those
+#: sites carry a baseline justification instead.
+_WALLCLOCK_ALLOW = ("benchmarks/", "examples/", "tools/")
+
+_NP_ALIASES = {"np", "numpy"}
+_SEEDED_NP_ATTRS = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                    "Philox", "MT19937", "BitGenerator"}
+_SEEDED_RANDOM_ATTRS = {"Random", "SystemRandom", "getstate", "setstate",
+                        "seed"}
+_CLOCK_ATTRS = {"time", "perf_counter", "perf_counter_ns", "monotonic",
+                "monotonic_ns", "process_time", "time_ns"}
+_SET_BUILTINS = {"set", "frozenset"}
+_ORDER_SINKS = {"list", "tuple", "enumerate"}
+_INT_FUNCS = {"len", "int", "ord", "round", "index"}
+
+
+def _dotted(node: ast.AST) -> str:
+    """`a.b.c` -> "a.b.c" (empty for non-name chains)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    """Expressions that statically evaluate to an unordered set."""
+    if isinstance(node, ast.Set):
+        return True
+    if isinstance(node, ast.SetComp):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _SET_BUILTINS:
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _is_set_expr(node.left) or _is_set_expr(node.right)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ("union", "intersection", "difference",
+                                   "symmetric_difference"):
+        return _is_set_expr(node.func.value)
+    return False
+
+
+def _is_integral(node: ast.AST) -> bool:
+    """Conservatively true when an expression is statically an int —
+    the only case builtin ``sum()`` is order-exact."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int) and not isinstance(
+            node.value, bool)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        if node.func.id in _INT_FUNCS:
+            return True
+        # sum(map(len, xs)) / map(int, xs): statically integral elements
+        if node.func.id == "map" and node.args and isinstance(
+                node.args[0], ast.Name) and node.args[0].id in _INT_FUNCS:
+            return True
+        return False
+    if isinstance(node, ast.UnaryOp):
+        return _is_integral(node.operand)
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.Add, ast.Sub, ast.Mult, ast.FloorDiv, ast.Mod)):
+        return _is_integral(node.left) and _is_integral(node.right)
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, ctx: FileContext, in_rng_scope: bool,
+                 clock_allowed: bool):
+        self.ctx = ctx
+        self.in_rng_scope = in_rng_scope
+        self.clock_allowed = clock_allowed
+        self.findings: list[Finding] = []
+
+    # -- DET001 / DET002: calls ---------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        parts = dotted.split(".")
+        if self.in_rng_scope and len(parts) >= 2:
+            if parts[-2] == "random" and parts[0] in _NP_ALIASES | {"random"}:
+                attr = parts[-1]
+                if len(parts) >= 3 or parts[0] in _NP_ALIASES:
+                    # np.random.X / numpy.random.X
+                    if attr not in _SEEDED_NP_ATTRS:
+                        self._add(DET001, node,
+                                  f"`{dotted}()` draws from NumPy's global "
+                                  f"RNG; thread a seeded "
+                                  f"`np.random.default_rng(seed)` instead")
+                    elif attr == "default_rng" and not node.args \
+                            and not node.keywords:
+                        self._add(DET001, node,
+                                  "`default_rng()` without a seed pulls OS "
+                                  "entropy; pass the config's seed")
+                elif parts[0] == "random":
+                    # stdlib random.X
+                    if attr not in _SEEDED_RANDOM_ATTRS:
+                        self._add(DET001, node,
+                                  f"`{dotted}()` uses the stdlib global "
+                                  f"RNG; use `random.Random(seed)`")
+                    elif attr == "Random" and not node.args \
+                            and not node.keywords:
+                        self._add(DET001, node,
+                                  "`random.Random()` without a seed pulls "
+                                  "OS entropy; pass the config's seed")
+        if not self.clock_allowed:
+            if len(parts) == 2 and parts[0] == "time" \
+                    and parts[1] in _CLOCK_ATTRS:
+                self._add(DET002, node,
+                          f"wall-clock read `{dotted}()` in a simulation "
+                          f"path; pass measured time in, or baseline with "
+                          f"a telemetry justification")
+            elif len(parts) >= 2 and parts[0] == "datetime" \
+                    and parts[-1] in ("now", "utcnow", "today"):
+                self._add(DET002, node,
+                          f"wall-clock read `{dotted}()`; timestamps "
+                          f"belong to the caller, not the simulation")
+        # DET003: ordering sinks over set expressions
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in _ORDER_SINKS and node.args \
+                and _is_set_expr(node.args[0]):
+            self._add(DET003, node,
+                      f"`{node.func.id}()` over an unordered set fixes an "
+                      f"arbitrary order; wrap the set in `sorted(...)`")
+        # DET004: builtin sum over non-integral elements
+        if isinstance(node.func, ast.Name) and node.func.id == "sum" \
+                and node.args:
+            arg = node.args[0]
+            elt = arg.elt if isinstance(
+                arg, (ast.GeneratorExp, ast.ListComp)) else arg
+            if not _is_integral(elt):
+                self._add(DET004, node,
+                          "builtin `sum()` folds left-to-right; floats "
+                          "must use `np.sum`/`math.fsum` to match the "
+                          "vectorized forms (suppress inline if the "
+                          "summands are provably ints)")
+        self.generic_visit(node)
+
+    # -- DET003: iteration --------------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        if _is_set_expr(node.iter):
+            self._add(DET003, node,
+                      "iteration over an unordered set; wrap in "
+                      "`sorted(...)` so downstream order is deterministic")
+        self.generic_visit(node)
+
+    def _visit_comp(self, node) -> None:
+        for gen in node.generators:
+            if _is_set_expr(gen.iter):
+                self._add(DET003, gen.iter,
+                          "comprehension over an unordered set; wrap in "
+                          "`sorted(...)`")
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # -- DET005: float equality ---------------------------------------------
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left, *node.comparators]
+        for op, (lhs, rhs) in zip(node.ops, zip(operands, operands[1:])):
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            for side in (lhs, rhs):
+                if isinstance(side, ast.Constant) \
+                        and isinstance(side.value, float):
+                    self._add(DET005, node,
+                              f"`{'==' if isinstance(op, ast.Eq) else '!='}"
+                              f"` against float literal {side.value!r}; "
+                              f"use a tolerance or suppress where "
+                              f"exactness is the property under test")
+                    break
+        self.generic_visit(node)
+
+    def _add(self, rule: Rule, node: ast.AST, message: str) -> None:
+        self.findings.append(self.ctx.finding(rule, node, message))
+
+
+class DeterminismPass(LintPass):
+    name = "determinism"
+    rules = (DET001, DET002, DET003, DET004, DET005)
+
+    def applies_to(self, path: str) -> bool:
+        return path.startswith(_SCOPES) or path.startswith("<")
+
+    def visit(self, ctx: FileContext) -> list[Finding]:
+        in_rng_scope = ctx.path.startswith(_RNG_SCOPES) \
+            or ctx.path.startswith("<")
+        clock_allowed = ctx.path.startswith(_WALLCLOCK_ALLOW)
+        v = _Visitor(ctx, in_rng_scope, clock_allowed)
+        v.visit(ctx.tree)
+        return v.findings

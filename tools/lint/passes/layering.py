@@ -1,0 +1,268 @@
+"""Layering pass (LAY*): the `docs/architecture.md` layer map as code.
+
+The architecture doc draws a DAG — `core` at the bottom, kernels and the
+framework consumers above it, `serve`/`train`/`launch`/`trials` on top.
+This pass makes that map machine-checked:
+
+- ``ALLOWED`` is the authoritative edge list for *module-load-time*
+  imports between `src/repro` packages (an undeclared edge is LAY001);
+- imports deferred into function bodies are allowed anywhere EXCEPT the
+  hard-forbidden pairs in ``FORBIDDEN`` (LAY002) — deferral is the
+  sanctioned way to break a load-time cycle, not a layering escape
+  hatch;
+- module-level import cycles are always errors (LAY003).
+
+Changing the architecture means editing ``ALLOWED`` *and*
+`docs/architecture.md` in the same PR — the table there mirrors this
+map.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Callable, Optional
+
+from ..core import FileContext, Finding, ProjectPass, Rule
+
+LAY001 = Rule(
+    "LAY001", "undeclared-import-edge", "error",
+    rationale=(
+        "A module-load-time import between `src/repro` packages that "
+        "the layer map does not declare.  Either the code belongs in a "
+        "different layer, or the map (this pass's `ALLOWED` table AND "
+        "`docs/architecture.md`) must be updated deliberately in the "
+        "same PR."),
+    example="from repro.serve.engine import DecodeEngine  # in core/",
+)
+
+LAY002 = Rule(
+    "LAY002", "forbidden-import", "error",
+    rationale=(
+        "Hard layering violations that hold even for imports deferred "
+        "into function bodies: `core` may not reach `serve`/`launch`/"
+        "`trials` (the simulation calculus cannot depend on its "
+        "consumers), and `kernels` may not reach `serve`.  These edges "
+        "invert the dependency arrows the whole registry design "
+        "exists to keep one-directional."),
+    example="def f():\n    from repro.serve import engine  # in core/",
+)
+
+LAY003 = Rule(
+    "LAY003", "import-cycle", "error",
+    rationale=(
+        "A module-level import cycle inside `src/repro`: load order "
+        "becomes entry-point-dependent and partially-initialized "
+        "modules leak.  Break the cycle by moving the import into the "
+        "function that needs it (and keeping LAY002 satisfied) or by "
+        "extracting the shared piece downward."),
+    example="core/a.py imports core/b.py imports core/a.py",
+)
+
+#: package -> packages it may import AT MODULE LOAD TIME.  Top-level
+#: modules (`sharding.py`) count as their own single-module package.
+#: This table IS the layer map in docs/architecture.md — update both.
+ALLOWED: dict[str, frozenset[str]] = {
+    "core": frozenset(),
+    "sharding": frozenset(),
+    "data": frozenset(),
+    "checkpoint": frozenset(),
+    "configs": frozenset(),
+    "models": frozenset({"sharding"}),
+    "optim": frozenset({"sharding"}),
+    "kernels": frozenset({"core"}),
+    "balance": frozenset({"core"}),
+    "serve": frozenset({"core", "models"}),
+    "train": frozenset({"core", "models", "optim", "data", "balance",
+                        "checkpoint"}),
+    "trials": frozenset({"core", "serve"}),
+    "launch": frozenset({"core", "models", "optim", "data", "configs",
+                         "sharding", "serve", "train", "balance",
+                         "kernels", "trials"}),
+}
+
+#: package -> packages it may NEVER import, even deferred.
+FORBIDDEN: dict[str, frozenset[str]] = {
+    "core": frozenset({"serve", "launch", "trials"}),
+    "kernels": frozenset({"serve"}),
+}
+
+
+def module_name(path: str) -> str | None:
+    """`src/repro/serve/engine.py` -> "repro.serve.engine" (None for
+    files outside src/)."""
+    if not path.startswith("src/") or not path.endswith(".py"):
+        return None
+    mod = path[len("src/"):-len(".py")].replace("/", ".")
+    if mod.endswith(".__init__"):
+        mod = mod[: -len(".__init__")]
+    return mod
+
+
+def package_of(mod: str) -> str | None:
+    """"repro.serve.engine" -> "serve"; "repro.sharding" -> "sharding"."""
+    parts = mod.split(".")
+    if parts[0] != "repro" or len(parts) < 2:
+        return None
+    return parts[1]
+
+
+def _resolve_relative(mod: str, node: ast.ImportFrom,
+                      is_package: bool) -> str | None:
+    """Resolve a relative import to an absolute repro.* module name."""
+    if node.level == 0:
+        return node.module
+    parts = mod.split(".")
+    # a package's __init__ counts as one level shallower than its name
+    up = node.level - (1 if is_package else 0)
+    if up >= len(parts):
+        return None
+    base = parts[: len(parts) - up]
+    if node.module:
+        base = base + node.module.split(".")
+    return ".".join(base)
+
+
+def import_edges(mod: str, tree: ast.AST, is_package: bool,
+                 ) -> list[tuple[str, bool, ast.AST]]:
+    """All repro-internal imports of a module as
+    ``(target_module, deferred, node)``."""
+    edges: list[tuple[str, bool, ast.AST]] = []
+
+    def walk(node: ast.AST, deferred: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            inner_deferred = deferred or isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            if isinstance(child, ast.Import):
+                for alias in child.names:
+                    if alias.name.split(".")[0] == "repro":
+                        edges.append((alias.name, deferred, child))
+            elif isinstance(child, ast.ImportFrom):
+                target = _resolve_relative(mod, child, is_package)
+                if target and target.split(".")[0] == "repro":
+                    edges.append((target, deferred, child))
+            walk(child, inner_deferred)
+
+    walk(tree, False)
+    return edges
+
+
+def check_import_graph(modules: dict[str, tuple[ast.AST, bool, str]],
+                       allowed: Optional[dict[str, frozenset[str]]] = None,
+                       forbidden: Optional[dict[str, frozenset[str]]] = None,
+                       line_of: Optional[Callable[[str, int], str]] = None,
+                       ) -> list[Finding]:
+    """Core check over ``{module_name: (tree, is_package, path)}`` —
+    separated from file collection so tests can feed synthetic graphs."""
+    allowed = ALLOWED if allowed is None else allowed
+    forbidden = FORBIDDEN if forbidden is None else forbidden
+    findings: list[Finding] = []
+    toplevel_graph: dict[str, set[str]] = {m: set() for m in modules}
+    node_lines: dict[tuple[str, str], tuple[int, str]] = {}
+
+    for mod, (tree, is_pkg, path) in modules.items():
+        src_pkg = package_of(mod)
+        if src_pkg is None:
+            continue
+        for target, deferred, node in import_edges(mod, tree, is_pkg):
+            dst_pkg = package_of(target)
+            if dst_pkg is None:
+                continue
+            line = getattr(node, "lineno", 1)
+            context = line_of(path, line) if line_of else ""
+            if dst_pkg in forbidden.get(src_pkg, ()):
+                findings.append(Finding(
+                    rule=LAY002, path=path, line=line, col=0,
+                    message=(f"`{src_pkg}` may never import `{dst_pkg}` "
+                             f"(even deferred): {mod} -> {target}"),
+                    context=context))
+                continue
+            if src_pkg != dst_pkg and not deferred:
+                if dst_pkg not in allowed.get(src_pkg, ()):
+                    findings.append(Finding(
+                        rule=LAY001, path=path, line=line, col=0,
+                        message=(f"undeclared load-time edge `{src_pkg}` "
+                                 f"-> `{dst_pkg}` ({mod} imports "
+                                 f"{target}); declare it in the layer "
+                                 f"map or defer the import"),
+                        context=context))
+            if not deferred:
+                # cycle detection runs at module granularity; count the
+                # edge toward the *module* actually loaded
+                tmod = target
+                while tmod and tmod not in modules:
+                    tmod = tmod.rpartition(".")[0]
+                if tmod and tmod != mod:
+                    toplevel_graph[mod].add(tmod)
+
+    findings.extend(_find_cycles(toplevel_graph, modules))
+    return findings
+
+
+def _find_cycles(graph: dict[str, set[str]],
+                 modules: dict[str, tuple[ast.AST, bool, str]],
+                 ) -> list[Finding]:
+    """Tarjan SCC over the load-time module graph; every SCC with more
+    than one node (or a self-loop) is a cycle."""
+    index: dict[str, int] = {}
+    low: dict[str, int] = {}
+    on_stack: set[str] = set()
+    stack: list[str] = []
+    counter = [0]
+    sccs: list[list[str]] = []
+
+    def strongconnect(v: str) -> None:
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        for w in sorted(graph.get(v, ())):
+            if w not in index:
+                strongconnect(w)
+                low[v] = min(low[v], low[w])
+            elif w in on_stack:
+                low[v] = min(low[v], index[w])
+        if low[v] == index[v]:
+            scc = []
+            while True:
+                w = stack.pop()
+                on_stack.discard(w)
+                scc.append(w)
+                if w == v:
+                    break
+            sccs.append(scc)
+
+    for v in sorted(graph):
+        if v not in index:
+            strongconnect(v)
+
+    findings = []
+    for scc in sccs:
+        if len(scc) > 1 or (len(scc) == 1 and scc[0] in graph.get(
+                scc[0], ())):
+            members = sorted(scc)
+            path = modules[members[0]][2]
+            findings.append(Finding(
+                rule=LAY003, path=path, line=1, col=0,
+                message=("module-level import cycle: "
+                         + " <-> ".join(members)),
+                context=""))
+    return findings
+
+
+class LayeringPass(ProjectPass):
+    name = "layering"
+    rules = (LAY001, LAY002, LAY003)
+
+    def run(self, files: dict[str, FileContext]) -> list[Finding]:
+        modules: dict[str, tuple[ast.AST, bool, str]] = {}
+        for path, ctx in files.items():
+            mod = module_name(path)
+            if mod is None or not mod.startswith("repro"):
+                continue
+            modules[mod] = (ctx.tree, path.endswith("__init__.py"), path)
+
+        def line_of(path: str, line: int) -> str:
+            ctx = files.get(path)
+            return ctx.line_text(line) if ctx else ""
+
+        return check_import_graph(modules, line_of=line_of)

@@ -1,0 +1,256 @@
+"""Registry-contract pass (REG*).
+
+The technique registry is a plugin surface (after the user-defined-
+scheduling interface of arXiv:1906.08911): `@register_technique` classes
+declare `TechniqueSpec` flags, and separate `bind_*` calls attach
+execution forms (scalar class, lockstep `step_batch`, in-graph plan /
+campaign forms).  Nothing ties flags and forms together at bind time —
+an inconsistent pair used to surface only when a campaign silently fell
+back to the event oracle, or a padded jit consumer indexed past its
+bound.  This pass checks the form/flag contracts against the *live*
+registry (importing `repro.core` is the one authoritative way to know
+what a registration site actually produced), then anchors each finding
+at the `@register_technique` class's `file:line` via AST.
+
+The docs-sync gate (`python -m repro.core.schedule --check
+docs/techniques.md`) is folded in as REG005: the generated reference is
+itself a registry contract.
+
+Pure contract predicates live in :func:`check_entry` so fixture tests
+can feed synthetic entries without importing jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+from ..core import REPO_ROOT, FileContext, Finding, ProjectPass, Rule
+
+REG001 = Rule(
+    "REG001", "dead-step-batch", "error",
+    rationale=(
+        "A `step_batch` form is bound but the lockstep band can never "
+        "route to it: the band takes only adaptive/worker-dependent "
+        "techniques outside mutex sync (`batch_sim`'s routing "
+        "predicate, mirrored in the docs generator's `_batch_band`).  "
+        "A dead form means the oracle is silently authoritative and "
+        "the vectorized code is untested."),
+    example=("TechniqueSpec(..., adaptive=False, worker_dependent=False) "
+             "+ bind_step_batch(...)"),
+)
+
+REG002 = Rule(
+    "REG002", "graph-form-without-bound", "error",
+    rationale=(
+        "A technique with an in-graph form must expose a sound "
+        "`max_chunks` bound: jitted consumers (`jax_sched` padding, the "
+        "campaign engine's grant buffers) statically size arrays from "
+        "`max_chunks_bound`, and campaign (`step`) forms have no "
+        "closed-form fallback estimate — an unbounded one under- "
+        "allocates and truncates grants silently."),
+    example="bind_graph_step(name, step)  # with tdef.max_chunks=None",
+)
+
+REG003 = Rule(
+    "REG003", "stealing-in-graph-band", "error",
+    rationale=(
+        "Work-stealing techniques (`stealing=True`) are excluded from "
+        "the graph band by design: deque state machines replay pops in "
+        "event order and cannot be expressed as the dense lockstep "
+        "`lax.while_loop` (documented in `tests/test_graph_sim.py`).  "
+        "A bound campaign form would trace, run, and return wrong "
+        "chunk *positions*."),
+    example="bind_graph_step('ws_rr', CampaignStep(...))",
+)
+
+REG004 = Rule(
+    "REG004", "techdef-without-campaign-form", "warning",
+    rationale=(
+        "A `TechniqueDef` is bound (via `bind_techdef`) but no campaign "
+        "graph form was derived from it: the technique silently runs "
+        "host-only while looking graph-eligible.  `graph_sim` binds "
+        "campaign forms for every TechniqueDef at import; a missing one "
+        "means registration order broke or an exclusion should be made "
+        "explicit."),
+    example="bind_techdef(name, tdef)  # without bind_campaign_form(name)",
+)
+
+REG005 = Rule(
+    "REG005", "docs-out-of-sync", "error",
+    rationale=(
+        "`docs/techniques.md` is generated from the registry and CI "
+        "fails on any drift (the PR-3 docs-sync gate, folded into this "
+        "driver).  Regenerate with `PYTHONPATH=src python -m "
+        "repro.core.schedule --doc --out docs/techniques.md`."),
+    example="registering a technique without regenerating techniques.md",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryInfo:
+    """The form/flag surface of one registered technique — a plain
+    record so the contract predicates are testable without jax."""
+
+    name: str
+    adaptive: bool
+    worker_dependent: bool
+    stealing: bool
+    sync: str
+    has_step_batch: bool
+    has_graph_step: bool  # campaign (lax.scan) form
+    has_plan_form: bool  # builder or next_size
+    has_max_chunks: bool  # GraphForm.max_chunks resolvable
+    has_techdef: bool
+
+
+def check_entry(e: EntryInfo) -> list[tuple[Rule, str]]:
+    """The pure contracts: (rule, message) per violation."""
+    out: list[tuple[Rule, str]] = []
+    if e.has_step_batch and not (e.adaptive or e.worker_dependent):
+        out.append((REG001,
+                    f"`{e.name}` binds step_batch but is neither adaptive "
+                    f"nor worker-dependent — the plan band handles it and "
+                    f"the lockstep form is dead code"))
+    elif e.has_step_batch and e.sync == "mutex":
+        out.append((REG001,
+                    f"`{e.name}` binds step_batch but declares mutex "
+                    f"sync — the lockstep band models the atomic path "
+                    f"only, so the form is unreachable"))
+    if e.has_graph_step and not e.has_max_chunks:
+        out.append((REG002,
+                    f"`{e.name}` has a campaign graph form but no "
+                    f"max_chunks bound — jitted consumers cannot size "
+                    f"grant buffers soundly"))
+    elif e.has_plan_form and e.adaptive and not e.has_max_chunks:
+        out.append((REG002,
+                    f"`{e.name}` is adaptive with a plan form but no "
+                    f"explicit max_chunks bound — the geometric default "
+                    f"estimate is unsound for telemetry-driven chunk "
+                    f"sequences"))
+    if e.stealing and e.has_graph_step:
+        out.append((REG003,
+                    f"`{e.name}` is a stealing technique with a campaign "
+                    f"graph form — deque pops cannot replay under "
+                    f"lax.while_loop; the steal band is host-only"))
+    if e.has_techdef and not e.has_graph_step:
+        out.append((REG004,
+                    f"`{e.name}` carries a TechniqueDef but no campaign "
+                    f"form was derived — run bind_campaign_form or make "
+                    f"the exclusion explicit"))
+    return out
+
+
+def _entry_info(entry) -> EntryInfo:
+    m = entry.meta
+    g = entry.graph
+    has_step = g is not None and g.step is not None
+    has_plan = g is not None and (g.builder is not None
+                                  or g.next_size is not None)
+    has_bound = g is not None and g.max_chunks is not None
+    return EntryInfo(
+        name=entry.name,
+        adaptive=m.adaptive,
+        worker_dependent=getattr(m, "worker_dependent", False),
+        stealing=getattr(m, "stealing", False),
+        sync=m.sync,
+        has_step_batch=entry.step_batch is not None,
+        has_graph_step=has_step,
+        has_plan_form=has_plan,
+        has_max_chunks=has_bound,
+        has_techdef=entry.techdef is not None,
+    )
+
+
+def _class_anchor(cls) -> tuple[str, int]:
+    """(repo-relative path, lineno) of a registered class definition."""
+    import inspect
+
+    try:
+        path = Path(inspect.getsourcefile(cls)).resolve()
+        rel = str(path.relative_to(REPO_ROOT)).replace("\\", "/")
+        _, line = inspect.getsourcelines(cls)
+        return rel, line
+    except (TypeError, OSError, ValueError):
+        return "src/repro/core/techniques.py", 1
+
+
+def _in_repo(cls) -> bool:
+    """True when a registered class is defined under ``src/repro``.
+
+    The registry is a plugin surface: user plugins (and test fixtures
+    imported at pytest collection) legitimately register from outside
+    the tree.  Their contracts are their own business, and the
+    generated `docs/techniques.md` covers only the repo's portfolio —
+    so both the REG checks and the docs-sync comparison filter to
+    in-repo registrations."""
+    import inspect
+
+    try:
+        path = Path(inspect.getsourcefile(cls)).resolve()
+    except (TypeError, OSError):
+        return False
+    try:
+        path.relative_to(REPO_ROOT / "src" / "repro")
+    except ValueError:
+        return False
+    return True
+
+
+class RegistryContractPass(ProjectPass):
+    name = "registry-contract"
+    rules = (REG001, REG002, REG003, REG004, REG005)
+
+    #: generated docs file checked by REG005
+    docs_path = "docs/techniques.md"
+
+    def run(self, files: dict[str, FileContext]) -> list[Finding]:
+        registry, generate = self._load_registry()
+        if registry is None:
+            return []  # environment without jax: contracts need the
+            # live registry; CI always has it
+        # filter to the repo's own registrations: out-of-tree plugins /
+        # test fixtures may be live in this process but are not ours
+        repo_registry = {name: registry[name] for name in registry
+                         if _in_repo(registry[name].cls)}
+        findings: list[Finding] = []
+        for name, entry in repo_registry.items():
+            info = _entry_info(entry)
+            path, line = _class_anchor(entry.cls)
+            ctx = files.get(path)
+            context = ctx.line_text(line) if ctx else ""
+            for rule, message in check_entry(info):
+                findings.append(Finding(
+                    rule=rule, path=path, line=line, col=0,
+                    message=message, context=context))
+        findings.extend(self._check_docs_sync(repo_registry, generate))
+        return findings
+
+    def _load_registry(self):
+        import sys
+
+        src = str(REPO_ROOT / "src")
+        if src not in sys.path:
+            sys.path.insert(0, src)
+        try:
+            import repro.core  # noqa: F401  (registers all techniques)
+            from repro.core.schedule import (REGISTRY,
+                                             generate_techniques_doc)
+        except ImportError:
+            return None, None
+        return REGISTRY, generate_techniques_doc
+
+    def _check_docs_sync(self, registry, generate) -> list[Finding]:
+        doc_file = REPO_ROOT / self.docs_path
+        expected = generate(registry)
+        current = doc_file.read_text(
+            encoding="utf-8") if doc_file.exists() else None
+        if current == expected:
+            return []
+        return [Finding(
+            rule=REG005, path=self.docs_path, line=1, col=0,
+            message=(f"{self.docs_path} is stale vs the live registry "
+                     f"({len(registry)} techniques); regenerate with "
+                     f"`PYTHONPATH=src python -m repro.core.schedule "
+                     f"--doc --out {self.docs_path}`"),
+            context="")]

@@ -1,0 +1,331 @@
+"""JAX trace-safety pass (TRC*).
+
+Scoped to the jit-reachable code (`core/graph_sim.py`, `core/jax_sched.py`,
+`kernels/`): the files whose functions run under `jax.jit`, inside
+`lax.while_loop`/`lax.scan` bodies, or as Pallas kernel bodies.  The
+hazards are the classic trace-time failure modes — host control flow on
+traced values, host casts that force a sync (or a tracer error), NumPy
+ops silently materializing tracers, and Python side effects inside loop
+bodies that run once at trace time instead of once per iteration.
+
+Traced scopes are identified structurally, not by guessing about
+values: a function is traced when it is (a) decorated with `jax.jit` /
+`pl.pallas_call`-style wrappers, (b) passed by name to
+`lax.scan`/`while_loop`/`fori_loop`/`cond`/`switch`, or (c) nested
+inside such a function.  Host-level code in the same files (engine
+drivers, planners running on concrete arrays) is deliberately NOT
+flagged — static `if tdef.factoring:` branches inside an engine builder
+are trace-time constants, and the pass must stay quiet on them.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import FileContext, Finding, LintPass, Rule
+
+TRC001 = Rule(
+    "TRC001", "traced-control-flow", "error",
+    rationale=(
+        "`if`/`while`/`bool()` on a traced value raises "
+        "`TracerBoolConversionError` at trace time (or silently "
+        "specializes on one branch under `jit` re-tracing).  Branch on "
+        "traced values with `jnp.where`/`lax.cond`/`lax.select` "
+        "instead; Python control flow is for trace-time constants "
+        "only."),
+    example="if jnp.any(mask): ...  # inside a jitted function",
+)
+
+TRC002 = Rule(
+    "TRC002", "traced-host-cast", "error",
+    rationale=(
+        "`.item()`, `.tolist()`, `float()`, `int()`, `np.asarray()` on "
+        "a traced value either fails at trace time or (outside jit but "
+        "inside the hot path) forces a device sync.  Keep values as "
+        "jax arrays until they leave the traced scope."),
+    example="lim = int(sizes[0])  # inside a lax.while_loop body",
+)
+
+TRC003 = Rule(
+    "TRC003", "numpy-on-tracer", "error",
+    rationale=(
+        "`np.*` functions called inside a traced scope materialize "
+        "their arguments: on a tracer they raise, and on a constant "
+        "they silently bake the value into the compiled program (the "
+        "batch-vs-graph drift class).  Use `jnp.*` inside traced "
+        "scopes; precompute NumPy values on the host and pass them in "
+        "as operands."),
+    example="w = np.argmin(ready)  # inside a scan body",
+)
+
+TRC004 = Rule(
+    "TRC004", "loop-body-side-effect", "error",
+    rationale=(
+        "A `lax.scan`/`while_loop` body runs ONCE, at trace time; "
+        "`print`, file I/O, and mutation of closed-over Python state "
+        "(`.append` to an outer list, writes to outer names) do not "
+        "repeat per iteration and desynchronize host state from the "
+        "compiled loop.  Thread state through the carry, or use "
+        "`jax.debug.print` / `io_callback`."),
+    example="log.append(size)  # inside a while_loop body",
+)
+
+_SCOPES = ("src/repro/core/graph_sim.py", "src/repro/core/jax_sched.py",
+           "src/repro/kernels/")
+
+_JIT_DECORATORS = {"jit", "jax.jit", "pjit", "jax.pjit", "checkify"}
+_LOOP_COMBINATORS = {"scan", "while_loop", "fori_loop", "cond", "switch",
+                     "associative_scan", "map"}
+_JNP_ROOTS = {"jnp", "lax", "pl", "pltpu"}
+_NP_ROOTS = {"np", "numpy"}
+#: np attributes that are trace-safe to *read or call* (dtypes applied
+#: as casts still flag via the call check below; these are metadata).
+_NP_SAFE = {"float32", "float64", "int32", "int64", "bool_", "uint32",
+            "uint8", "pi", "e", "inf", "nan", "newaxis", "dtype",
+            "ndarray", "integer", "floating", "generic"}
+_CAST_FUNCS = {"float", "int", "bool", "complex"}
+_MUTATING_METHODS = {"append", "extend", "insert", "add", "update",
+                     "remove", "discard", "pop", "popleft", "appendleft",
+                     "write", "setdefault", "clear"}
+_SIDE_EFFECT_CALLS = {"print", "open", "input", "exec", "eval"}
+
+
+def _dotted(node: ast.AST) -> str:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _decorator_is_jit(dec: ast.AST) -> bool:
+    d = _dotted(dec)
+    if d in _JIT_DECORATORS:
+        return True
+    if isinstance(dec, ast.Call):
+        inner = _dotted(dec.func)
+        if inner in _JIT_DECORATORS:
+            return True
+        # functools.partial(jax.jit, ...) / partial(jit, static_...)
+        if inner.endswith("partial") and dec.args \
+                and _dotted(dec.args[0]) in _JIT_DECORATORS:
+            return True
+    return False
+
+
+def _contains_traced_call(node: ast.AST) -> bool:
+    """True when an expression *textually* computes through jnp/lax —
+    the conservative signal that its value is traced."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            root = d.split(".")[0]
+            if root in _JNP_ROOTS or d.startswith(("jax.numpy.",
+                                                   "jax.lax.")):
+                return True
+    return False
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Names bound inside a function body (params, assignments, loop
+    targets, withitems, comprehension-free local defs)."""
+    out: set[str] = set()
+    args = fn.args
+    for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+        out.add(a.arg)
+    if args.vararg:
+        out.add(args.vararg.arg)
+    if args.kwarg:
+        out.add(args.kwarg.arg)
+
+    class _Binds(ast.NodeVisitor):
+        def visit_Name(self, n: ast.Name) -> None:
+            if isinstance(n.ctx, ast.Store):
+                out.add(n.id)
+
+        def visit_FunctionDef(self, n) -> None:
+            out.add(n.name)  # nested defs bind their name; don't recurse
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Lambda(self, n) -> None:
+            pass
+
+    for stmt in fn.body:
+        _Binds().visit(stmt)
+    return out
+
+
+class TraceSafetyPass(LintPass):
+    name = "trace-safety"
+    rules = (TRC001, TRC002, TRC003, TRC004)
+
+    def applies_to(self, path: str) -> bool:
+        return path.startswith(_SCOPES) or path.startswith("<")
+
+    def visit(self, ctx: FileContext) -> list[Finding]:
+        findings: list[Finding] = []
+
+        # Pass 1: find traced scopes.
+        # - loop_bodies: functions passed by name to lax combinators
+        # - jitted: functions decorated with jit (incl. partial(jit))
+        loop_body_names: set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                parts = d.split(".")
+                if parts[-1] in _LOOP_COMBINATORS and (
+                        "lax" in parts or parts[0] == "jax"):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Name):
+                            loop_body_names.add(arg.id)
+                        elif isinstance(arg, ast.Lambda):
+                            self._check_traced(ctx, arg, findings,
+                                               is_loop_body=True)
+
+        # Pass 2: walk every function with traced-scope inheritance; each
+        # function's own statements are checked exactly once (nested defs
+        # are excluded from the parent's walk and get their own visit).
+        def recurse(node, traced: bool, loop_body: bool) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    fn_is_jit = any(_decorator_is_jit(d)
+                                    for d in child.decorator_list)
+                    fn_is_body = child.name in loop_body_names
+                    now_traced = traced or fn_is_jit or fn_is_body
+                    now_body = loop_body or fn_is_body
+                    if now_traced:
+                        self._check_traced(ctx, child, findings,
+                                           is_loop_body=now_body)
+                    recurse(child, now_traced, now_body)
+                else:
+                    recurse(child, traced, loop_body)
+
+        recurse(ctx.tree, False, False)
+        return findings
+
+    # -- the traced-scope check ---------------------------------------------
+    def _check_traced(self, ctx: FileContext, fn, findings: list[Finding],
+                      is_loop_body: bool) -> None:
+        locals_ = _local_names(fn) if not isinstance(fn, ast.Lambda) \
+            else {a.arg for a in fn.args.args}
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+
+        # exclude nested def bodies: they are separate scopes and get
+        # their own visit from the recursion (lambdas stay in-scope)
+        nested: set[ast.AST] = set()
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) and sub is not fn:
+                    nested.update(ast.walk(sub))
+
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if node in nested:
+                    continue
+                self._check_node(ctx, node, findings)
+                if is_loop_body:
+                    self._check_side_effects(ctx, node, locals_, findings)
+
+    def _check_node(self, ctx: FileContext, node: ast.AST,
+                    findings: list[Finding]) -> None:
+        # TRC001: host control flow computed through jnp/lax
+        if isinstance(node, (ast.If, ast.While)) \
+                and _contains_traced_call(node.test):
+            findings.append(ctx.finding(
+                TRC001, node,
+                "Python control flow on a traced expression; use "
+                "`jnp.where` / `lax.cond` / `lax.while_loop`"))
+        elif isinstance(node, ast.IfExp) \
+                and _contains_traced_call(node.test):
+            findings.append(ctx.finding(
+                TRC001, node,
+                "ternary on a traced condition; use `jnp.where`"))
+        elif isinstance(node, ast.Assert) \
+                and _contains_traced_call(node.test):
+            findings.append(ctx.finding(
+                TRC001, node,
+                "`assert` on a traced expression; use "
+                "`checkify` or move the check to the host"))
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            parts = d.split(".")
+            # TRC001: bool() forcing a concrete value
+            if d == "bool" and node.args \
+                    and _contains_traced_call(node.args[0]):
+                findings.append(ctx.finding(
+                    TRC001, node,
+                    "`bool()` on a traced expression raises at trace "
+                    "time; use `jnp.where`/`lax.cond`"))
+            # TRC002: host casts / .item()
+            elif d in _CAST_FUNCS - {"bool"} and node.args \
+                    and _contains_traced_call(node.args[0]):
+                findings.append(ctx.finding(
+                    TRC002, node,
+                    f"`{d}()` cast of a traced expression; keep it a "
+                    f"jax array until it leaves the traced scope"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist"):
+                findings.append(ctx.finding(
+                    TRC002, node,
+                    f"`.{node.func.attr}()` in a traced scope forces a "
+                    f"host round-trip (or a tracer error)"))
+            # TRC003: np.* calls
+            elif parts[0] in _NP_ROOTS and len(parts) > 1 \
+                    and parts[-1] not in _NP_SAFE:
+                findings.append(ctx.finding(
+                    TRC003, node,
+                    f"`{d}()` inside a traced scope: NumPy "
+                    f"materializes its arguments — use `jnp.{parts[-1]}` "
+                    f"or hoist the computation to the host"))
+
+    def _check_side_effects(self, ctx: FileContext, node: ast.AST,
+                            locals_: set[str],
+                            findings: list[Finding]) -> None:
+        # TRC004: trace-time side effects inside a loop body
+        if isinstance(node, ast.Global):
+            findings.append(ctx.finding(
+                TRC004, node,
+                "`global` write inside a loop body runs once at trace "
+                "time; thread state through the carry"))
+            return
+        if isinstance(node, ast.Nonlocal):
+            findings.append(ctx.finding(
+                TRC004, node,
+                "`nonlocal` write inside a loop body runs once at "
+                "trace time; thread state through the carry"))
+            return
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d in _SIDE_EFFECT_CALLS:
+                findings.append(ctx.finding(
+                    TRC004, node,
+                    f"`{d}()` in a loop body fires once at trace time; "
+                    f"use `jax.debug.print` / `io_callback`"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATING_METHODS:
+                root = node.func.value
+                if isinstance(root, ast.Name) and root.id not in locals_:
+                    findings.append(ctx.finding(
+                        TRC004, node,
+                        f"`.{node.func.attr}()` mutates closed-over "
+                        f"`{root.id}` once at trace time, not per "
+                        f"iteration; thread it through the carry"))
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id not in locals_:
+                    findings.append(ctx.finding(
+                        TRC004, node,
+                        f"subscript write to closed-over "
+                        f"`{t.value.id}` in a loop body happens at "
+                        f"trace time; use functional `.at[].set()` on "
+                        f"carried state"))
