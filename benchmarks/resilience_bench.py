@@ -1,0 +1,196 @@
+"""Resilience bench: what reclamation and the circuit breaker buy.
+
+``trial_bench`` gates dynamic-beats-static *across* schedules; this
+bench holds the schedule fixed (``awf_b/fac2``, the adaptive two-level
+spec) and compares the resilient serving loop with its failure
+machinery **active** (``ResilienceConfig()``: straggler deadlines,
+hedged re-execution, quarantine/probe breaker) against the same loop
+with the machinery **passive** (deadlines and quarantine thresholds
+pushed to infinity — identical physics, no reclamation).  The delta is
+the value of the resilience layer itself, uncontaminated by the
+schedule comparison or by the loop-physics difference from the
+original ``simulate_cluster`` path.
+
+Cells are the two fault scenarios where the machinery has work to do:
+
+  straggler      a replica goes 10x slow and stays there — deadline
+                 misses must reclaim its stranded grants (hedged
+                 re-execution, first completion wins)
+  gray_failure   a replica degrades 25x then silently heals — the
+                 breaker must quarantine it and probe it back in
+
+Gates (CI runs --quick):
+
+  * conservation — exactly-once holds in every trial of every cell,
+    active and passive, under injected stragglers: hedged duplicates
+    fold idempotently, none double-serve, none are lost;
+  * the straggler cell actually reclaims (``reclaimed > 0``) — the
+    machinery demonstrably fired, the gate is not vacuously green;
+  * every reported CI is finite at the committed trial counts;
+  * full run only: active p99 beats passive p99 on the straggler mean
+    (reclamation rescues the stranded tail rather than thrashing).
+
+Writes benchmarks/results/resilience_bench.json (full) or
+resilience_quick.json (--quick), so the CI gate never dirties the
+committed full-run artifact.
+
+    PYTHONPATH=src python -m benchmarks.resilience_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import platform
+import time
+
+from repro.serve.resilience import ResilienceConfig
+from repro.trials import run_cell, standard_suite, summarize_cell
+
+from .common import RESULTS
+
+#: the fixed two-level schedule every cell runs under
+SCHEDULE = "awf_b/fac2"
+#: fault scenarios from the standard suite the bench cells come from
+SCENARIOS = ("straggler", "gray_failure")
+#: metric the active-vs-passive comparison reports
+GATE_METRIC = "p99"
+TRIALS_FULL = 20
+TRIALS_QUICK = 3
+
+#: the machinery switched off without changing the loop physics: the
+#: watchdog deadline and the health thresholds are unreachable, so no
+#: grant is ever reclaimed and no replica is ever quarantined for
+#: slowness (crash probation still applies — it is crash-count-driven)
+PASSIVE = ResilienceConfig(deadline_k=1e9, suspect_ratio=1e9,
+                           quarantine_ratio=2e9,
+                           quarantine_misses=10**9)
+
+
+def _round_summary(s: dict) -> dict:
+    return dict(mean=round(s["mean"], 4),
+                ci=[round(s["ci"][0], 4), round(s["ci"][1], 4)],
+                trials=s["trials"])
+
+
+def run(quick: bool = False) -> dict:
+    trials = TRIALS_QUICK if quick else TRIALS_FULL
+    suite = {sc.name: sc for sc in standard_suite(quick=quick)}
+    out: dict = dict(
+        name="resilience_bench",
+        schedule=SCHEDULE,
+        trials_per_cell=trials,
+        gate_metric=GATE_METRIC,
+        python=platform.python_version(),
+        machine=platform.machine(),
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        scenarios={},
+    )
+    conserved = True
+    finite = True
+    for name in SCENARIOS:
+        sc = suite[name]
+        active = run_cell(sc, SCHEDULE, trials=trials)
+        passive = run_cell(dataclasses.replace(sc, resilience=PASSIVE),
+                           SCHEDULE, trials=trials)
+        sc_conserved = all(r.complete for r in active + passive)
+        conserved &= sc_conserved
+        s_act = summarize_cell(active, metrics=(GATE_METRIC,))[GATE_METRIC]
+        s_pas = summarize_cell(passive, metrics=(GATE_METRIC,))[GATE_METRIC]
+        for s in (s_act, s_pas):
+            finite &= all(map(math.isfinite,
+                              [s["mean"], s["ci"][0], s["ci"][1]]))
+        out["scenarios"][name] = dict(
+            n=sc.n,
+            traffic=sc.traffic,
+            conserved=bool(sc_conserved),
+            active=_round_summary(s_act),
+            passive=_round_summary(s_pas),
+            rescue_vs_passive=round(
+                s_pas["mean"] / max(s_act["mean"], 1e-12), 3),
+            reclaimed=int(sum(r.reclaimed or 0 for r in active)),
+            duplicates=int(sum(r.duplicates or 0 for r in active)),
+            quarantines=int(sum(r.quarantines or 0 for r in active)),
+        )
+    out["conserved"] = bool(conserved)
+    out["cis_finite"] = bool(finite)
+    return out
+
+
+def check(result: dict, quick: bool = False) -> list[str]:
+    """The bench's acceptance gates; returns failure messages."""
+    fails = []
+    if not result["conserved"]:
+        bad = [n for n, sc in result["scenarios"].items()
+               if not sc["conserved"]]
+        fails.append(f"exactly-once conservation violated in {bad} — "
+                     f"a hedged request was dropped or double-served")
+    if not result["cis_finite"]:
+        fails.append("a bootstrap CI came out non-finite at the "
+                     "committed trial counts")
+    strag = result["scenarios"].get("straggler")
+    if strag is not None and strag["reclaimed"] <= 0:
+        fails.append("the straggler cell reclaimed nothing — the "
+                     "deadline watchdog never fired, so the "
+                     "conservation gate is vacuous")
+    if not quick and strag is not None:
+        if strag["active"]["mean"] >= strag["passive"]["mean"]:
+            fails.append(
+                f"active resilience does not beat the passive loop on "
+                f"the straggler {result['gate_metric']} "
+                f"({strag['active']['mean']} vs "
+                f"{strag['passive']['mean']}) — reclamation is not "
+                f"rescuing the stranded tail")
+    return fails
+
+
+def rows(quick: bool = True) -> list[dict]:
+    """benchmarks.run entry point."""
+    r = run(quick=quick)
+    fails = check(r, quick=quick)
+    flat = []
+    for name, sc in r["scenarios"].items():
+        flat.append(dict(name=f"resilience/{name}",
+                         trials=r["trials_per_cell"],
+                         schedule=r["schedule"],
+                         active_p99=sc["active"]["mean"],
+                         active_p99_ci=sc["active"]["ci"],
+                         passive_p99=sc["passive"]["mean"],
+                         passive_p99_ci=sc["passive"]["ci"],
+                         speedup=sc["rescue_vs_passive"],
+                         reclaimed=sc["reclaimed"],
+                         duplicates=sc["duplicates"],
+                         quarantines=sc["quarantines"],
+                         conserved=sc["conserved"],
+                         gate_failures=fails))
+    return flat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help=f"{TRIALS_QUICK} trials per cell (CI)")
+    args = ap.parse_args()
+    result = run(quick=args.quick)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    # --quick (the CI gate) writes its own file so it never dirties the
+    # committed full-run artifact
+    name = "resilience_quick" if args.quick else "resilience_bench"
+    (RESULTS / f"{name}.json").write_text(json.dumps(result, indent=1))
+    for sc_name, sc in result["scenarios"].items():
+        print(f"{sc_name:14s} {GATE_METRIC} active={sc['active']['mean']:>8.4f} "
+              f"passive={sc['passive']['mean']:>8.4f} "
+              f"({sc['rescue_vs_passive']:.2f}x rescue)  "
+              f"reclaimed={sc['reclaimed']} dup={sc['duplicates']} "
+              f"quarantined={sc['quarantines']}")
+    fails = check(result, quick=args.quick)
+    if fails:
+        raise SystemExit("; ".join(fails))
+    print("conserved exactly-once in every cell; reclamation fired on "
+          "the straggler cell")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ import time
 
 from . import (adaptive_bench, batch_bench, cluster_balance,
                framework_bench, graph_campaign_bench, kernel_sched_bench,
-               paper_campaign, steal_bench, trial_bench)
+               paper_campaign, resilience_bench, steal_bench, trial_bench)
 from .common import RESULTS, emit
 
 
@@ -95,6 +95,9 @@ def main() -> None:
         # scenario trials (fault/elasticity + bootstrap CIs); quick-sized,
         # named so emit() doesn't overwrite the committed trial_suite.json
         "trial_quick": trial_bench.rows,
+        # reclamation/quarantine value on the fault scenarios; quick-
+        # sized, named so emit() doesn't overwrite resilience_bench.json
+        "resilience_quick": resilience_bench.rows,
     }
     # roofline needs dry-run artifacts; include when present
     try:

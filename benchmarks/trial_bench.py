@@ -14,18 +14,24 @@ conditions).
 Gates (CI runs --quick):
 
   * conservation — every submitted request is served exactly once in
-    every trial, across kills, recoveries and scale events;
+    every trial, across kills, recoveries, scale events and hedged
+    re-execution;
   * all reported CIs are finite (the statistics layer never degrades
     to NaN on the committed trial counts);
   * full run only: on at least one gated scenario (diurnal,
     flash_crowd, replica_failure, elastic_scale) the best dynamic
     TwoLevelSpec beats static partitioning on p99 latency with
-    non-overlapping 95% CIs.
+    non-overlapping 95% CIs;
+  * full run only: on *every* resilience scenario (thermal_degrade,
+    straggler, gray_failure, crash_loop — the cells that run under
+    ``serve/resilience.py`` physics) the best dynamic TwoLevelSpec
+    beats static likewise.
 
-``thermal_degrade`` is reported un-gated: replica chunks are served
-atomically, so a static node schedule that bound all work up front
-never feels a later degradation — the scenario documents the blind
-spot rather than gating on it.
+``thermal_degrade`` used to be reported un-gated — replica chunks were
+served atomically, so a static node schedule never felt a later
+degradation and no schedule could win believably.  Chunk reclamation
+closed that blind spot: the scenario (and the three fault scenarios
+beside it) now gates on dynamic+reclamation beating static.
 
 Writes benchmarks/results/trial_suite.json (full) or trial_quick.json
 (--quick), so the CI gate never dirties the committed full-run
@@ -54,9 +60,14 @@ from .common import RESULTS
 #: two-level schedules compared per scenario; "static/fac2" is the
 #: baseline every gate measures against
 SCHEDULES = ("static/fac2", "fac2/fac2", "awf_b/fac2")
-#: scenarios the dynamic-beats-static claim is gated on
+#: scenarios the dynamic-beats-static claim is gated on (at least one
+#: must win)
 GATED_SCENARIOS = ("diurnal", "flash_crowd", "replica_failure",
                    "elastic_scale")
+#: resilient-physics scenarios: *every one* must show the best dynamic
+#: schedule beating static with disjoint CIs (full runs)
+RESILIENCE_GATED = ("thermal_degrade", "straggler", "gray_failure",
+                    "crash_loop")
 #: metric the win gate uses (within-trial request percentile, compared
 #: across trials)
 GATE_METRIC = "p99"
@@ -122,7 +133,7 @@ def run(quick: bool = False) -> dict:
             ci_nonoverlap=bool(significant),
             dynamic_win=bool(win),
         )
-        if sc.name in GATED_SCENARIOS and win:
+        if sc.name in GATED_SCENARIOS + RESILIENCE_GATED and win:
             dynamic_wins.append(sc.name)
     out["dynamic_wins"] = dynamic_wins
     out["conserved"] = bool(conserved)
@@ -142,11 +153,20 @@ def check(result: dict, quick: bool = False) -> list[str]:
     if not result["cis_finite"]:
         fails.append("a bootstrap CI came out non-finite at the "
                      "committed trial counts")
-    if not quick and not result["dynamic_wins"]:
-        fails.append(
-            f"no gated scenario shows a dynamic TwoLevelSpec beating "
-            f"static partitioning on {result['gate_metric']} with "
-            f"non-overlapping 95% CIs (gated: {list(GATED_SCENARIOS)})")
+    if not quick:
+        if not any(n in GATED_SCENARIOS for n in result["dynamic_wins"]):
+            fails.append(
+                f"no gated scenario shows a dynamic TwoLevelSpec beating "
+                f"static partitioning on {result['gate_metric']} with "
+                f"non-overlapping 95% CIs (gated: {list(GATED_SCENARIOS)})")
+        missing = [n for n in RESILIENCE_GATED
+                   if n in result["scenarios"]
+                   and n not in result["dynamic_wins"]]
+        if missing:
+            fails.append(
+                f"resilience scenarios {missing} do not show "
+                f"dynamic+reclamation beating static on "
+                f"{result['gate_metric']} with non-overlapping 95% CIs")
     return fails
 
 

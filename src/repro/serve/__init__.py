@@ -15,6 +15,16 @@ from .cluster import (  # noqa: F401
     simulate_cluster,
     simulate_cluster_batch,
 )
-from .elastic import elastic_handoff, resize_scheduler  # noqa: F401
+from .elastic import (  # noqa: F401
+    elastic_handoff,
+    neutralize_worker_state,
+    resize_scheduler,
+)
 from .engine import DecodeEngine, EngineStats  # noqa: F401
+from .resilience import (  # noqa: F401
+    HealthTracker,
+    ReclaimGrant,
+    ResilienceConfig,
+    simulate_cluster_resilient,
+)
 from .scheduler import Request, RequestScheduler, simulate_serving  # noqa: F401

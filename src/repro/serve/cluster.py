@@ -114,7 +114,11 @@ class ReplicaSpeed(ClusterEvent):
     Replica chunks are served atomically, so the new speed applies from
     the replica's *next* node-level pull — a static node technique that
     bound all its work up front never feels a later degradation, which
-    is exactly the blind spot the thermal trial scenarios probe.
+    is exactly the blind spot the thermal trial scenarios probe.  The
+    resilience layer (``serve/resilience.py``, enabled with
+    ``simulate_cluster(..., resilience=...)``) closes it: there a speed
+    event *interrupts* the in-flight chunk and overdue grants are
+    reclaimed to healthy replicas.
     """
 
     replica: int
@@ -136,6 +140,63 @@ class ScaleTo(ClusterEvent):
     """
 
     num_replicas: int
+
+
+def _event_capacity(evs: Sequence[ClusterEvent], num_replicas: int) -> int:
+    """The largest replica id any event can touch (array capacity)."""
+    cap = num_replicas
+    for ev in evs:
+        if isinstance(ev, ScaleTo):
+            cap = max(cap, int(ev.num_replicas))
+        elif isinstance(ev, (ReplicaKill, ReplicaRecover, ReplicaSpeed)):
+            cap = max(cap, int(ev.replica) + 1)
+        else:
+            raise TypeError(f"unknown cluster event {ev!r}")
+    return cap
+
+
+def _validate_events(evs: Sequence[ClusterEvent], num_replicas: int,
+                     cap: int) -> None:
+    """Reject incoherent event programs up front.
+
+    A ``ReplicaKill`` of an already-dead replica and a
+    ``ReplicaRecover`` of a never-killed one used to flow through the
+    heap silently (the kill was skipped, the recover activated whatever
+    was down) — masking scenario-authoring bugs.  Replays the program in
+    time order (stable in program order at ties, matching the heap) over
+    an alive/killed model and raises a ``ValueError`` naming the replica
+    and time on the first contradiction.
+    """
+    alive = [r < num_replicas for r in range(cap)]
+    down = [False] * cap  # killed and not yet recovered
+    for ev in sorted(evs, key=lambda e: float(e.time)):
+        if isinstance(ev, ReplicaKill):
+            r = int(ev.replica)
+            if down[r]:
+                raise ValueError(
+                    f"duplicate ReplicaKill for replica {r} at "
+                    f"t={ev.time}: replica is already dead")
+            if not alive[r]:
+                raise ValueError(
+                    f"ReplicaKill for replica {r} at t={ev.time}: "
+                    f"replica is not active (dormant or scaled down)")
+            alive[r] = False
+            down[r] = True
+        elif isinstance(ev, ReplicaRecover):
+            r = int(ev.replica)
+            if not down[r]:
+                raise ValueError(
+                    f"ReplicaRecover for replica {r} at t={ev.time}: "
+                    f"replica was never killed")
+            down[r] = False
+            alive[r] = True
+        elif isinstance(ev, ScaleTo):
+            m = int(ev.num_replicas)
+            for r in range(cap):
+                if r >= m:
+                    alive[r] = False
+                elif not down[r]:
+                    alive[r] = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +363,38 @@ class ClusterRouter:
             if loc is not None:
                 self.sched.complete(loc, elapsed=float(busy))
 
+    def take_one(self) -> Optional[Request]:
+        """Pop the front-most pending request, bypassing the technique.
+
+        The circuit breaker's probe hook (``serve/resilience.py``): a
+        quarantined replica is outside the active membership, so it
+        cannot ``pull`` — a probe takes exactly one real request off the
+        backlog instead.  No grant is opened, so the probe's measurement
+        never feeds the node technique.  Returns ``None`` on an empty
+        backlog.
+        """
+        if self._steal:
+            raise ValueError("steal-band routers do not support take_one "
+                             "(probe grants)")
+        got = self.sched.take_front(1)
+        return got[0] if got else None
+
+    def neutralize(self, replica: int) -> None:
+        """Neutralize replica ``replica``'s adaptive node weight at the
+        next plan rebuild (the circuit-breaker rejoin hook).
+
+        The replica's pre-quarantine telemetry described a degraded
+        machine; a rejoin inherits node state via ``set_active`` →
+        ``Technique.inherit``, so without this the healed replica would
+        keep its starved weight.  No-op for replicas outside the active
+        set and for non-adaptive node techniques.
+        """
+        if self._steal:
+            return
+        loc = self._local.get(replica)
+        if loc is not None:
+            self.sched.neutralize_worker(loc)
+
     @property
     def backlog(self) -> int:
         if self._steal:
@@ -381,7 +474,8 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
                      recorder: Optional[LoopRecorder] = None,
                      loop: str = "cluster",
                      events: Sequence[ClusterEvent] = (),
-                     return_completions: bool = False) -> dict:
+                     return_completions: bool = False,
+                     resilience: Optional["object"] = None) -> dict:
     """Event-driven two-level serving simulation.
 
     The upper level is a :class:`ClusterRouter`: a replica pulls its
@@ -425,21 +519,37 @@ def simulate_cluster(requests: Sequence[Request], num_replicas: int,
     carried by ``Technique.inherit``).  ``ScaleTo`` events may grow the
     cluster past ``num_replicas``; the ``replica_*`` result arrays then
     cover the grown capacity.  Steal-band node schedules do not support
-    events.
+    events.  Incoherent event programs (killing an already-dead replica,
+    recovering a never-killed one) raise ``ValueError`` up front.
+
+    ``resilience`` switches on the failure-response layer (straggler
+    deadlines, chunk reclamation with hedged re-execution, circuit-
+    breaker quarantine — see ``serve/resilience.py``): pass a
+    ``ResilienceConfig`` to dispatch to
+    :func:`~repro.serve.resilience.simulate_cluster_resilient`, whose
+    physics close this module's chunk-atomicity blind spot (a mid-chunk
+    ``ReplicaSpeed`` event interrupts the chunk there instead of waiting
+    for the next pull).  With ``resilience=None`` (the default) this
+    function's behavior — and every digest downstream — is unchanged.
     """
     import heapq
 
+    if resilience is not None:
+        if router is not None:
+            raise ValueError("resilience does not support router "
+                             "continuation (router=...)")
+        from .resilience import simulate_cluster_resilient
+        return simulate_cluster_resilient(
+            requests, num_replicas,
+            workers_per_replica=workers_per_replica, schedule=schedule,
+            replica_speed=replica_speed, recorder=recorder, loop=loop,
+            events=events, return_completions=return_completions,
+            resilience=resilience)
+
     spec = TwoLevelSpec.parse(schedule)
     evs = list(events)
-    # capacity: the largest replica id any event can touch
-    cap = num_replicas
-    for ev in evs:
-        if isinstance(ev, ScaleTo):
-            cap = max(cap, int(ev.num_replicas))
-        elif isinstance(ev, (ReplicaKill, ReplicaRecover, ReplicaSpeed)):
-            cap = max(cap, int(ev.replica) + 1)
-        else:
-            raise TypeError(f"unknown cluster event {ev!r}")
+    cap = _event_capacity(evs, num_replicas)
+    _validate_events(evs, num_replicas, cap)
     speed_in = (np.ones(num_replicas) if replica_speed is None
                 else np.asarray(replica_speed, dtype=np.float64))
     if speed_in.shape != (num_replicas,):

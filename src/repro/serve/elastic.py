@@ -31,7 +31,69 @@ import numpy as np
 from ..core import make_technique, plan_schedule, replan
 from .scheduler import RequestScheduler
 
-__all__ = ["elastic_handoff", "resize_scheduler"]
+__all__ = ["elastic_handoff", "resize_scheduler", "neutralize_worker_state"]
+
+
+def neutralize_worker_state(tech, workers) -> bool:
+    """Reset the adaptive per-worker state of ``workers`` to a neutral
+    prior, in place — the circuit-breaker rejoin hook.
+
+    A replica rejoining after quarantine inherits the node technique's
+    state (``set_active`` → ``Technique.inherit``), including the
+    telemetry that described its *degraded* self — without this the
+    healed replica keeps a starved weight indefinitely.  Mirrors the
+    grow-path of AWF's ``inherit``: the worker's weighted-average-
+    performance ratio becomes the mean of the other workers' (den 1.0),
+    its telemetry window zeroes, and its raw weight becomes the mean of
+    the others' before the usual sum-to-p renormalization.  Attributes
+    are ``getattr``-guarded so non-adaptive techniques are a no-op;
+    returns whether any state changed.
+    """
+    p = int(getattr(tech, "p", 0))
+    picked = sorted({int(i) for i in workers if 0 <= int(i) < p})
+    if not picked:
+        return False
+    chosen = {i: True for i in picked}
+    changed = False
+    num = getattr(tech, "_wap_num", None)
+    den = getattr(tech, "_wap_den", None)
+    if num is not None and den is not None:
+        num = np.asarray(num, dtype=np.float64).copy()
+        den = np.asarray(den, dtype=np.float64).copy()
+        others = [j for j in range(p) if j not in chosen and den[j] > 0.0]
+        if others:
+            prior = float(np.mean(np.asarray(
+                [num[j] / den[j] for j in others])))
+            for i in picked:
+                num[i] = prior
+                den[i] = 1.0
+        else:
+            for i in picked:
+                num[i] = 0.0
+                den[i] = 0.0
+        tech._wap_num = num
+        tech._wap_den = den
+        changed = True
+    for name in ("_sum_time", "_sum_size"):
+        arr = getattr(tech, name, None)
+        if arr is not None:
+            a = np.asarray(arr).copy()
+            for i in picked:
+                a[i] = 0
+            setattr(tech, name, a)
+            changed = True
+    w = getattr(tech, "weights", None)
+    if w is not None:
+        w = np.asarray(w, dtype=np.float64).copy()
+        others = [j for j in range(p) if j not in chosen]
+        neutral = float(np.mean(w[others])) if others else 1.0
+        for i in picked:
+            w[i] = neutral
+        total = float(np.sum(w))
+        if total > 0.0:
+            tech.weights = p * w / total
+        changed = True
+    return changed
 
 
 def resize_scheduler(sched: RequestScheduler,

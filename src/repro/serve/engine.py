@@ -38,6 +38,9 @@ class EngineStats:
     steps: int = 0
     tokens: int = 0
     wall_s: float = 0.0
+    # requests shed at admission by the deadline-aware policy
+    # (DecodeEngine(shed_slo=...)); 0 when shedding is disabled
+    shed: int = 0
 
     @property
     def tok_per_s(self) -> float:
@@ -49,11 +52,18 @@ class DecodeEngine:
                  technique="fac2", greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
                  kernel_schedule="fac2", kernel_p: int = 8,
-                 kv_block: int = 16):
+                 kv_block: int = 16, shed_slo: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # deadline-aware shedding (serve/resilience.py's admission
+        # policy at the engine level): with a step budget of
+        # shed_slo * healthy_lanes, backlog beyond what healthy capacity
+        # can decode inside the budget is shed at refill instead of
+        # queueing unbounded; None disables (byte-identical behavior)
+        self.shed_slo = shed_slo
+        self.shed_rids: list[int] = []
         self.sched = RequestScheduler(num_workers=slots, technique=technique)
         # decode-attention KV tile planning: the same
         # plan_tiles_for_kernel path the Pallas kernels use, driven by the
@@ -155,6 +165,7 @@ class DecodeEngine:
     def run(self, max_steps: int = 10_000) -> EngineStats:
         stats = EngineStats()
         t0 = time.time()
+        self._shed(stats)
         self._refill()
         while self._active_mask.any() or self.sched.backlog:
             if stats.steps >= max_steps:
@@ -165,6 +176,7 @@ class DecodeEngine:
             if self._need_refill:
                 # only when a slot retired: steady-state decode steps
                 # skip the admission scan (and any re-planning) entirely
+                self._shed(stats)
                 self._refill()
         stats.wall_s = time.time() - t0
         return stats
@@ -209,6 +221,43 @@ class DecodeEngine:
         self.kernel_recorder.add(plan.to_record(
             "decode_kv",
             instance=self.kernel_recorder.next_instance("decode_kv")))
+
+    def _shed(self, stats: Optional[EngineStats] = None) -> int:
+        """Deadline-aware shedding: drop the backlog tail the healthy
+        lanes cannot decode within the ``shed_slo`` step budget.
+
+        The per-request step estimate is prefill (its prompt tokens) +
+        decode (its clamped ``max_new_tokens``); requests are admitted
+        in arrival order until the summed estimate exceeds
+        ``shed_slo x healthy_lanes``, and the rest are shed — a bounded
+        queue under gray failure (disabled lanes shrink the budget), in
+        place of unbounded queueing toward a blown SLO.
+        """
+        if self.shed_slo is None:
+            return 0
+        lanes = 0
+        for s in range(self.slots):
+            if not self._disabled[s]:
+                lanes += 1
+        budget = float(self.shed_slo) * lanes
+        acc = 0.0
+        over: dict[int, bool] = {}
+        for req in self.sched._pending[self.sched._head:]:
+            prompt = getattr(req, "prompt_tokens", None)
+            pre = (len(prompt) if prompt is not None
+                   else min(req.prompt_len, self.max_len // 2))
+            est = pre + min(req.max_new_tokens, self.max_len // 2)
+            acc += float(est)
+            if acc > budget:
+                over[req.rid] = True
+        if not over:
+            return 0
+        dropped = self.sched.drop(lambda r: r.rid in over)
+        for req in dropped:
+            self.shed_rids.append(req.rid)
+        if stats is not None:
+            stats.shed += len(dropped)
+        return len(dropped)
 
     def _refill(self):
         admitted = False

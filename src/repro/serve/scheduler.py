@@ -75,6 +75,10 @@ class RequestScheduler:
             w: [] for w in range(self.num_workers)}
         # per-worker outstanding grant awaiting complete()
         self._outstanding: dict[int, object] = {}
+        # workers whose inherited adaptive state must be neutralized at
+        # the next plan rebuild (circuit-breaker rejoin: the replica's
+        # pre-quarantine telemetry described a degraded machine)
+        self._neutralize: dict[int, bool] = {}
 
     def submit(self, req: Request) -> None:
         self._pending.append(req)
@@ -88,6 +92,11 @@ class RequestScheduler:
         tech = self.spec.make(n=self.backlog, p=self.num_workers)
         if self._tech is not None:
             tech.inherit(self._tech)
+        if self._neutralize:
+            # deferred import: elastic imports this module at top level
+            from .elastic import neutralize_worker_state
+            neutralize_worker_state(tech, sorted(self._neutralize))
+            self._neutralize.clear()
         self._plan_gen += 1
         tech.begin_instance(self._plan_gen)
         return tech
@@ -159,6 +168,58 @@ class RequestScheduler:
         if grant is None or self._tech is None:
             return
         self._tech.complete_chunk(worker, grant, float(elapsed))
+
+    def take_front(self, k: int) -> list[Request]:
+        """Pop up to ``k`` requests off the backlog front, bypassing the
+        admission technique.
+
+        The probe path of the resilience layer: a quarantined replica is
+        not granted chunks, but its circuit-breaker probe still needs a
+        real request.  No grant is opened — the caller must not
+        ``complete()`` for this take — and the current plan is left as
+        is: granted sizes are clamped to the live backlog at pull time,
+        so the plan simply runs out ``k`` requests earlier.
+        """
+        if k <= 0 or self._head >= len(self._pending):
+            return []
+        head = self._head
+        out = self._pending[head:head + k]
+        self._head = head + len(out)
+        if self._head >= len(self._pending):
+            self._pending.clear()
+            self._head = 0
+        return out
+
+    def drop(self, pred) -> list[Request]:
+        """Remove every pending request matching ``pred``; return them.
+
+        The admission-shedding hook (``DecodeEngine`` deadline-aware
+        shedding): dropped requests were never granted, so no technique
+        or telemetry state needs repair — the next plan rebuild simply
+        sees the smaller backlog.
+        """
+        keep: list[Request] = []
+        dropped: list[Request] = []
+        for req in self._pending[self._head:]:
+            if pred(req):
+                dropped.append(req)
+            else:
+                keep.append(req)
+        if dropped:
+            self._pending = keep
+            self._head = 0
+        return dropped
+
+    def neutralize_worker(self, worker: int) -> None:
+        """Mark ``worker``'s adaptive state for neutralization at the
+        next plan rebuild (after ``inherit`` runs) — the rejoin path of
+        the circuit breaker.  See ``elastic.neutralize_worker_state``.
+        """
+        w = int(worker)
+        if not 0 <= w < self.num_workers:
+            raise ValueError(f"worker {w} out of range "
+                             f"[0, {self.num_workers})")
+        self._neutralize[w] = True
 
     @property
     def backlog(self) -> int:

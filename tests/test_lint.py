@@ -66,6 +66,7 @@ def test_rule_ids_are_unique_and_complete():
     assert set(rule_ids) == {
         "DET001", "DET002", "DET003", "DET004", "DET005",
         "TRC001", "TRC002", "TRC003", "TRC004",
+        "ROB001",
         "LAY001", "LAY002", "LAY003",
         "REG001", "REG002", "REG003", "REG004", "REG005",
     }
@@ -75,7 +76,8 @@ def test_all_passes_registered():
     # the fixture positives below go through the registered pass list;
     # this pins the list itself so no pass can be dropped silently
     from tools.lint.passes import FILE_PASSES, PROJECT_PASSES
-    assert {p.name for p in FILE_PASSES} == {"determinism", "trace-safety"}
+    assert {p.name for p in FILE_PASSES} == {"determinism", "trace-safety",
+                                             "robustness"}
     assert {p.name for p in PROJECT_PASSES} == {"layering",
                                                 "registry-contract"}
 
@@ -308,6 +310,78 @@ def test_trc_out_of_scope_for_host_modules():
            "    return -x\n")
     assert "TRC001" not in ids(
         lint_source(src, "src/repro/serve/engine_fixture.py"))
+
+
+# ---------------------------------------------------------------------------
+# ROB: robustness (swallowed exceptions)
+# ---------------------------------------------------------------------------
+
+
+def test_rob001_flags_bare_except_without_reraise():
+    src = ("def f():\n"
+           "    try:\n"
+           "        risky()\n"
+           "    except:\n"
+           "        return None\n")
+    assert "ROB001" in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_flags_except_exception_pass():
+    src = ("def f():\n"
+           "    try:\n"
+           "        risky()\n"
+           "    except Exception:\n"
+           "        pass\n")
+    assert "ROB001" in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_flags_broad_type_in_tuple_with_continue():
+    src = ("def f(items):\n"
+           "    for it in items:\n"
+           "        try:\n"
+           "            use(it)\n"
+           "        except (ValueError, BaseException):\n"
+           "            continue\n")
+    assert "ROB001" in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_quiet_on_narrow_type():
+    src = ("def f():\n"
+           "    try:\n"
+           "        risky()\n"
+           "    except ValueError:\n"
+           "        pass\n")
+    assert "ROB001" not in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_quiet_on_handled_broad_catch():
+    # a broad catch whose body *does something* (records, returns a
+    # degraded value) is a judgment call, not a swallow
+    src = ("def f():\n"
+           "    try:\n"
+           "        return risky()\n"
+           "    except Exception:\n"
+           "        return {'ok': False}\n")
+    assert "ROB001" not in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_quiet_on_bare_except_with_reraise():
+    src = ("def f():\n"
+           "    try:\n"
+           "        risky()\n"
+           "    except:\n"
+           "        cleanup()\n"
+           "        raise\n")
+    assert "ROB001" not in ids(lint_source(src, CORE_PATH))
+
+
+def test_rob001_out_of_scope_outside_src_repro():
+    src = ("def f():\n"
+           "    try:\n"
+           "        risky()\n"
+           "    except Exception:\n"
+           "        pass\n")
+    assert "ROB001" not in ids(lint_source(src, "benchmarks/fixture.py"))
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,28 @@ def test_trace_round_trip(tmp_path):
     assert back == reqs
 
 
+def test_trace_replay_reproduces_digest_under_faults(tmp_path):
+    # satellite: a saved/loaded trace under a failure_program replays to
+    # the identical TrialResult digest — with and without reclamation
+    from repro.serve.resilience import ResilienceConfig
+    from repro.trials import load_trace, save_trace
+    reqs = make_traffic("spiky", n=120, seed=7)
+    p = tmp_path / "trace.json"
+    save_trace(p, reqs)
+    events = failure_program(kill_at=0.05, replicas=(1,), recover_at=0.15)
+    for resilience in (None, ResilienceConfig()):
+        live = Scenario(name="rt", n=120, num_replicas=3,
+                        trace=trace_from_requests(reqs), events=events,
+                        resilience=resilience)
+        replayed = Scenario(name="rt", n=120, num_replicas=3,
+                            trace=load_trace(p), events=events,
+                            resilience=resilience)
+        a = run_trial(live, "awf_b/fac2", seed=0)
+        b = run_trial(replayed, "awf_b/fac2", seed=0)
+        assert a.complete and b.complete
+        assert a.digest() == b.digest()
+
+
 # ---------------------------------------------------------------------------
 # conservation across faults/elasticity
 # ---------------------------------------------------------------------------
@@ -161,6 +183,44 @@ def test_scale_up_activates_new_replicas():
         r.rid for r in reqs)
     assert len(out["replica_requests"]) == 6
     assert sum(out["replica_requests"][2:]) > 0  # grown replicas served
+
+
+def test_recover_without_kill_rejected():
+    reqs = make_traffic("spiky", n=60, seed=0)
+    with pytest.raises(ValueError, match=r"replica 1.*never killed"):
+        simulate_cluster(reqs, num_replicas=3, schedule="fac2/fac2",
+                         events=[ReplicaRecover(time=0.1, replica=1)])
+
+
+def test_duplicate_kill_rejected():
+    reqs = make_traffic("spiky", n=60, seed=0)
+    with pytest.raises(ValueError,
+                       match=r"duplicate ReplicaKill for replica 0 at "
+                             r"t=0\.2"):
+        simulate_cluster(reqs, num_replicas=3, schedule="fac2/fac2",
+                         events=[ReplicaKill(time=0.1, replica=0),
+                                 ReplicaKill(time=0.2, replica=0)])
+
+
+def test_kill_after_scale_down_rejected():
+    reqs = make_traffic("spiky", n=60, seed=0)
+    with pytest.raises(ValueError, match=r"replica 2.*not active"):
+        simulate_cluster(reqs, num_replicas=3, schedule="fac2/fac2",
+                         events=[ScaleTo(time=0.05, num_replicas=1),
+                                 ReplicaKill(time=0.1, replica=2)])
+
+
+def test_kill_recover_kill_sequence_valid():
+    # re-killing after a recovery is a legal program, not a duplicate
+    reqs = make_traffic("spiky", n=80, seed=0)
+    out = simulate_cluster(
+        reqs, num_replicas=3, schedule="fac2/fac2",
+        events=[ReplicaKill(time=0.05, replica=0),
+                ReplicaRecover(time=0.1, replica=0),
+                ReplicaKill(time=0.15, replica=0)],
+        return_completions=True)
+    assert sorted(r for r, _ in out["completions"]) == sorted(
+        r.rid for r in reqs)
 
 
 def test_events_rejected_for_steal_band():
@@ -252,10 +312,21 @@ def test_run_suite_shape():
 
 
 def test_standard_suite_contents():
-    names = [s.name for s in standard_suite()]
+    suite = standard_suite()
+    names = [s.name for s in suite]
     for required in ("diurnal", "flash_crowd", "replica_failure",
-                     "elastic_scale"):
+                     "elastic_scale", "thermal_degrade", "straggler",
+                     "gray_failure", "crash_loop"):
         assert required in names
+    # the resilience scenarios (and only they) opt into the resilient
+    # physics; the original four keep byte-identical digests
+    by_name = {s.name: s for s in suite}
+    for plain in ("diurnal", "flash_crowd", "replica_failure",
+                  "elastic_scale"):
+        assert by_name[plain].resilience is None
+    for resilient in ("thermal_degrade", "straggler", "gray_failure",
+                      "crash_loop"):
+        assert by_name[resilient].resilience is not None
     quick = standard_suite(quick=True)
     assert all(s.n < 800 for s in quick)
     # event times scale with n so the quick faults stay mid-stream
@@ -283,11 +354,15 @@ def test_bootstrap_ci_seeded_and_sane():
 
 
 def test_bootstrap_ci_edge_cases():
-    lo, hi = bootstrap_ci([])
-    assert math.isnan(lo) and math.isnan(hi)
+    # degenerate samples give *finite* zero-width intervals (quick-gate
+    # finite-CI checks must never fail on sample size alone)
+    assert bootstrap_ci([]) == (0.0, 0.0)
     assert bootstrap_ci([4.2]) == (4.2, 4.2)
     lo, hi = bootstrap_ci([3.0, 3.0, 3.0])
     assert lo == hi == 3.0
+    lo, hi = bootstrap_ci([7.0] * 5, stat=lambda s: float(np.percentile(
+        s, 99)))
+    assert lo == hi == 7.0 and math.isfinite(lo)
 
 
 def test_bootstrap_ci_custom_stat():

@@ -7,12 +7,14 @@ the whole file set.  Adding a pass here is all it takes to wire it into
 
 from .determinism import DeterminismPass
 from .trace_safety import TraceSafetyPass
+from .robustness import RobustnessPass
 from .layering import LayeringPass
 from .registry_contract import RegistryContractPass
 
 FILE_PASSES = (
     DeterminismPass(),
     TraceSafetyPass(),
+    RobustnessPass(),
 )
 
 PROJECT_PASSES = (
@@ -25,6 +27,7 @@ __all__ = [
     "PROJECT_PASSES",
     "DeterminismPass",
     "TraceSafetyPass",
+    "RobustnessPass",
     "LayeringPass",
     "RegistryContractPass",
 ]

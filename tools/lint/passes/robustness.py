@@ -1,0 +1,113 @@
+"""Robustness pass (ROB*).
+
+The resilience layer (``serve/resilience.py``) turns failures into
+*signals*: deadline misses, degraded observations and crashes drive
+reclamation and quarantine.  A handler that swallows exceptions starves
+exactly that machinery — a gray failure caught by ``except: pass``
+looks healthy to the ``HealthTracker`` forever.  ROB001 flags the two
+shapes that hide errors wholesale:
+
+- a bare ``except:`` whose body does not re-raise (it also catches
+  ``KeyboardInterrupt``/``SystemExit``);
+- ``except Exception`` / ``except BaseException`` (alone or in a
+  tuple) whose body is *only* ``pass`` / ``...`` / ``continue`` — the
+  error is dropped without record or response.
+
+Handlers that narrow the exception type, log-and-raise, or return a
+degraded-but-explicit value are fine; genuinely-intentional swallows
+carry an inline suppression or a baseline justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import FileContext, Finding, LintPass, Rule
+
+ROB001 = Rule(
+    "ROB001", "swallowed-exception", "error",
+    rationale=(
+        "A bare `except:` that does not re-raise, or an "
+        "`except Exception:`/`except BaseException:` whose body is only "
+        "`pass`/`...`/`continue`, hides the very failure signals the "
+        "resilience layer exists to act on — a swallowed error in "
+        "src/repro is a gray failure the HealthTracker can never see.  "
+        "Narrow the type, handle-and-record, or re-raise."),
+    example="except Exception: pass  # in src/repro",
+)
+
+#: Swallowing is contractual only where the failure signals feed the
+#: scheduling/serving machinery: the library core.
+_SCOPES = ("src/repro/",)
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(type_node: ast.expr | None) -> bool:
+    """Does the handler catch Exception/BaseException (incl. tuples)?"""
+    if type_node is None:
+        return False
+    if isinstance(type_node, ast.Tuple):
+        return any(_is_broad(e) for e in type_node.elts)
+    if isinstance(type_node, ast.Name):
+        return type_node.id in _BROAD
+    if isinstance(type_node, ast.Attribute):
+        return type_node.attr in _BROAD
+    return False
+
+
+def _reraises(body: list[ast.stmt]) -> bool:
+    """Does any statement in the handler body (recursively) raise?"""
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Raise):
+                return True
+    return False
+
+
+def _swallows(body: list[ast.stmt]) -> bool:
+    """Is the handler body only `pass` / `...` / `continue`?"""
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis):
+            continue
+        return False
+    return True
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.findings: list[Finding] = []
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if node.type is None:
+            if not _reraises(node.body):
+                self.findings.append(self.ctx.finding(
+                    ROB001, node,
+                    "bare `except:` without re-raise swallows every "
+                    "error (KeyboardInterrupt/SystemExit included); "
+                    "narrow the type or re-raise"))
+        elif _is_broad(node.type) and _swallows(node.body):
+            self.findings.append(self.ctx.finding(
+                ROB001, node,
+                "`except Exception`-class handler whose body is only "
+                "pass/.../continue drops the failure signal; handle, "
+                "record, or narrow the type"))
+        self.generic_visit(node)
+
+
+class RobustnessPass(LintPass):
+    name = "robustness"
+    rules = (ROB001,)
+
+    def applies_to(self, path: str) -> bool:
+        return path.startswith(_SCOPES) or path.startswith("<")
+
+    def visit(self, ctx: FileContext) -> list[Finding]:
+        v = _Visitor(ctx)
+        v.visit(ctx.tree)
+        return v.findings
